@@ -1,0 +1,59 @@
+"""Render the §Perf hillclimb comparison: baseline vs variant roofline terms.
+
+Reads reports/dryrun.json (baselines) + reports/dryrun_hc.json (variants);
+prints per-cell before/after tables used in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def terms(cell):
+    cost = cell.get("per_device_cost") or cell["raw_cost"]
+    raw = cell["raw_cost"]
+    return {
+        "compute_s": max(cost["flops"], raw["flops"]) / PEAK_FLOPS,
+        "memory_s": max(cost["bytes_accessed"],
+                        raw["bytes_accessed"]) / HBM_BW,
+        "collective_s": max(cost["collective_bytes"], 0.0) / ICI_BW,
+        "peak_gib": cell["per_device"]["peak_hbm_bytes"] / 2**30,
+    }
+
+
+def main():
+    base = json.loads((ROOT / "reports" / "dryrun.json").read_text())
+    hc_path = ROOT / "reports" / "dryrun_hc.json"
+    hc = json.loads(hc_path.read_text()) if hc_path.exists() else {}
+    cells = sorted({k.rsplit("|", 1)[0] for k in hc})
+    for cell in cells:
+        if cell not in base or base[cell].get("status") != "ok":
+            continue
+        arch, shape, _ = cell.split("|")
+        b = terms(base[cell])
+        ideal = model_flops(arch, shape, base[cell]["devices"]) / PEAK_FLOPS
+        print(f"\n## {cell}  (ideal compute {ideal:.3f}s)")
+        hdr = f"{'variant':16s}{'compute':>9s}{'memory':>9s}" \
+              f"{'collect':>9s}{'overlap':>9s}{'frac':>7s}{'peakGiB':>9s}"
+        print(hdr)
+
+        def row(name, t):
+            ov = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            frac = ideal / ov if ov else 0
+            print(f"{name:16s}{t['compute_s']:9.3f}{t['memory_s']:9.3f}"
+                  f"{t['collective_s']:9.3f}{ov:9.3f}{frac:7.3f}"
+                  f"{t['peak_gib']:9.1f}")
+
+        row("baseline", b)
+        for k in sorted(hc):
+            if k.rsplit("|", 1)[0] == cell and hc[k].get("status") == "ok":
+                row(k.rsplit("|", 1)[1], terms(hc[k]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Benchmarks reproducing every table/figure of the Shared-PIM paper.
+
+Each function prints CSV rows ``name,value,paper_value`` and returns a list
+of (name, value, paper_value, ok) tuples.  Run via ``python -m benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import area, copy_models, nonpim, pluto, scheduler, taskgraph
+from repro.core.pluto import Interconnect
+
+Row = tuple[str, float, float | None, bool]
+
+
+def _row(name: str, value: float, paper: float | None, tol: float) -> Row:
+    ok = paper is None or abs(value - paper) <= tol
+    return (name, value, paper, ok)
+
+
+def table2_copy() -> list[Row]:
+    """Table II: 8KB inter-subarray copy latency (ns) and energy (uJ)."""
+    t2 = copy_models.table2()
+    paper = {
+        "memcpy (via mem. channel)": (1366.25, 6.2),
+        "RC-InterSA": (1363.75, 4.33),
+        "LISA": (260.5, 0.17),
+        "Shared-PIM": (52.75, 0.14),
+    }
+    rows = []
+    for mech, (lat, en) in t2.items():
+        plat, pen = paper[mech]
+        rows.append(_row(f"table2.{mech}.latency_ns", lat, plat, 0.01))
+        rows.append(_row(f"table2.{mech}.energy_uJ", en, pen, 0.01))
+    return rows
+
+
+def fig6_timeline() -> list[Row]:
+    """Fig 6: Shared-PIM copy command timeline vs RC-InterSA and LISA."""
+    return [
+        _row("fig6.sharedpim_vs_lisa_speedup",
+             copy_models.lisa_copy(distance=1).latency_ns
+             / copy_models.sharedpim_copy().latency_ns, 4.94, 0.1),
+        _row("fig6.sharedpim_vs_rc_speedup",
+             copy_models.rc_intersa_copy().latency_ns
+             / copy_models.sharedpim_copy().latency_ns, 25.85, 0.2),
+    ]
+
+
+def fig7_ops() -> list[Row]:
+    """Fig 7: pLUTo+LISA vs pLUTo+Shared-PIM N-bit add/mul latency."""
+    paper_pct = {("add", 32): 0.18, ("mul", 32): 0.31,
+                 ("add", 128): 0.40, ("mul", 128): 0.40}
+    rows = []
+    for (op, bits), v in pluto.fig7_table().items():
+        rows.append(_row(f"fig7.{op}{bits}.lisa_ns", v["lisa_ns"], None, 0))
+        rows.append(_row(f"fig7.{op}{bits}.sharedpim_ns",
+                         v["shared_pim_ns"], None, 0))
+        rows.append(_row(f"fig7.{op}{bits}.improvement",
+                         v["improvement"], paper_pct.get((op, bits)), 0.01))
+    return rows
+
+
+def fig8_apps() -> list[Row]:
+    """Fig 8: five application benchmarks, latency + transfer energy."""
+    cases = [("mm", dict(n=200), 0.40), ("pmm", dict(n=300), 0.44),
+             ("ntt", dict(n=512), 0.31), ("bfs", dict(n_nodes=1000), 0.29),
+             ("dfs", dict(n_nodes=1000), 0.29)]
+    rows = []
+    savings = []
+    for app, kw, target in cases:
+        res = {m: scheduler.schedule(taskgraph.build(app, m, **kw), m)
+               for m in Interconnect}
+        lisa, sp = res[Interconnect.LISA], res[Interconnect.SHARED_PIM]
+        imp = 1.0 - sp.makespan_ns / lisa.makespan_ns
+        esave = 1.0 - sp.transfer_energy_j / lisa.transfer_energy_j
+        savings.append(esave)
+        rows.append(_row(f"fig8.{app}.lisa_us", lisa.makespan_ns / 1e3,
+                         None, 0))
+        rows.append(_row(f"fig8.{app}.sharedpim_us", sp.makespan_ns / 1e3,
+                         None, 0))
+        rows.append(_row(f"fig8.{app}.improvement", imp, target, 0.04))
+        rows.append(_row(f"fig8.{app}.transfer_energy_saving", esave,
+                         None, 0))
+    rows.append(_row("fig8.avg_transfer_energy_saving",
+                     sum(savings) / len(savings), 0.18, 0.02))
+    return rows
+
+
+def table3_area() -> list[Row]:
+    """Table III: area breakdown and Shared-PIM overhead vs pLUTo."""
+    return [
+        _row("table3.base_dram_mm2", area.total(0), 70.24, 0.01),
+        _row("table3.pluto_bsa_mm2", area.total(1), 82.00, 0.02),
+        _row("table3.pluto_sharedpim_mm2", area.total(2), 87.87, 0.01),
+        _row("table3.overhead_pct", area.sharedpim_overhead_pct(), 7.16, 0.02),
+    ]
+
+
+def fig9_nonpim() -> list[Row]:
+    """Fig 9: normalized IPC in non-PIM scenarios (no regression claim)."""
+    rows = []
+    for app, r in nonpim.fig9_table().items():
+        rows.append(_row(f"fig9.{app}.lisa_ipc", r["lisa"], None, 0))
+        rows.append(_row(f"fig9.{app}.sharedpim_ipc", r["shared_pim"],
+                         None, 0))
+        # structural claim: no regression
+        rows.append(_row(f"fig9.{app}.no_regression",
+                         float(r["shared_pim"] >= r["lisa"] >= 1.0), 1.0, 0))
+    return rows
+
+
+ALL = {
+    "table2": table2_copy,
+    "fig6": fig6_timeline,
+    "fig7": fig7_ops,
+    "fig8": fig8_apps,
+    "table3": table3_area,
+    "fig9": fig9_nonpim,
+}
+
+
+def run_all() -> list[Row]:
+    rows: list[Row] = []
+    for name, fn in ALL.items():
+        t0 = time.perf_counter()
+        rows.extend(fn())
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"{name}.bench_wall_us", dt, None, True))
+    return rows

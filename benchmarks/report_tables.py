@@ -1,0 +1,99 @@
+"""Render §Dry-run and §Roofline markdown tables into EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m benchmarks.report_tables
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers
+(idempotent: regenerates between marker and the next section header).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+from benchmarks import roofline
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+REPORT = ROOT / "reports" / "dryrun.json"
+EXPERIMENTS = ROOT / "EXPERIMENTS.md"
+
+
+def dryrun_table(report: dict) -> str:
+    lines = ["| arch | shape | mesh | status | compile s | peak HBM/dev"
+             " (upper bnd) | flops/dev | coll bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(report):
+        arch, shape, mesh = key.split("|")
+        c = report[key]
+        if c["status"] == "ok":
+            cost = c.get("per_device_cost") or c["raw_cost"]
+            flops = max(cost["flops"], c["raw_cost"]["flops"])
+            coll = max(cost["collective_bytes"], 0.0)
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | ok | {c['compile_s']} | "
+                f"{c['per_device']['peak_hbm_bytes']/2**30:.1f} GiB | "
+                f"{flops:.3e} | {coll:.3e} |")
+        elif c["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | SKIP (design) "
+                         f"| — | — | — | — |")
+        else:
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR | — | — |"
+                         f" — | — |")
+    n_ok = sum(1 for c in report.values() if c["status"] == "ok")
+    n_skip = sum(1 for c in report.values() if c["status"] == "skipped")
+    n_err = len(report) - n_ok - n_skip
+    lines.append("")
+    lines.append(f"Cells: {n_ok} compiled OK, {n_skip} skipped by design, "
+                 f"{n_err} errors.")
+    return "\n".join(lines)
+
+
+def roofline_table(report: dict) -> str:
+    rows = roofline.analyze(report)
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | serial s | overlapped s | ideal s | MODEL/HLO "
+             "flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['serial_s']:.4f} | "
+            f"{r['overlapped_s']:.4f} | {r['ideal_s']:.4f} | "
+            f"{r['model_vs_hlo_flops']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def _splice(text: str, marker: str, table: str) -> str:
+    # replace from marker to the next "## " heading (or EOF)
+    pat = re.compile(rf"({re.escape(marker)}\n)(.*?)(?=\n## |\Z)", re.S)
+    return pat.sub(lambda m: m.group(1) + "\n" + table + "\n", text)
+
+
+def perf_table() -> str:
+    """Markdown version of the hillclimb before/after comparison."""
+    import io
+    import contextlib
+    from benchmarks import hillclimb_summary
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        hillclimb_summary.main()
+    return "```\n" + buf.getvalue().strip() + "\n```"
+
+
+def main() -> None:
+    report = json.loads(REPORT.read_text())
+    text = EXPERIMENTS.read_text()
+    text = _splice(text, "<!-- DRYRUN_TABLE -->", dryrun_table(report))
+    text = _splice(text, "<!-- ROOFLINE_TABLE -->", roofline_table(report))
+    try:
+        text = _splice(text, "<!-- PERF_TABLE -->", perf_table())
+    except FileNotFoundError:
+        pass
+    EXPERIMENTS.write_text(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

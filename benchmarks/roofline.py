@@ -1,0 +1,190 @@
+"""Roofline analysis from the dry-run report (DESIGN.md Sec 7).
+
+Per (arch x shape), single-pod mesh:
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+We report both aggregation conventions:
+    serial     = compute + memory + collective    (LISA-style: no overlap)
+    overlapped = max(compute, memory, collective) (Shared-PIM-style)
+
+and roofline_fraction = ideal / overlapped, where ideal = MODEL_FLOPS /
+(chips * PEAK) uses 6*N*D (6*N_active*D for MoE; decode counts one token).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--report PATH]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+REPORT = pathlib.Path(__file__).resolve().parents[1] / "reports" / \
+    "dryrun.json"
+
+
+def _param_counts(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from a ModelConfig."""
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    dh = cfg.head_dim
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+    attn = d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    total = active = embed
+    for i in range(L):
+        if cfg.family == "ssm" or (cfg.family == "hybrid"):
+            di = cfg.d_inner
+            n = cfg.ssm_state
+            mix = d * 2 * di + di * cfg.ssm_conv + di * d
+            if cfg.mamba_version == 1:
+                mix += di * (max(1, d // 16) + 2 * n) + max(1, d // 16) * di
+            else:
+                mix += d * 2 * n + 2 * d * (di // cfg.ssm_head_dim)
+            total += mix
+            active += mix
+            continue
+        is_moe = (cfg.family == "moe"
+                  and (i % cfg.moe_every) == cfg.moe_every - 1)
+        total += attn
+        active += attn
+        if is_moe:
+            routed = 3 * d * cfg.moe_d_ff
+            total += cfg.n_experts * routed
+            active += cfg.n_experts_active * routed
+            if cfg.shared_expert_d_ff:
+                total += 3 * d * cfg.shared_expert_d_ff
+                active += 3 * d * cfg.shared_expert_d_ff
+        else:
+            total += 3 * d * cfg.d_ff
+            active += 3 * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        # shared blocks (attn + MLP; weights reused across applications)
+        shared = attn + 3 * d * cfg.d_ff
+        total += cfg.n_shared_attn_blocks * shared
+        active += (L // cfg.attn_every) * shared
+    if cfg.family == "vlm":
+        n_cross = L // cfg.cross_attn_every
+        total += n_cross * attn
+        active += n_cross * attn
+    return float(total), float(active)
+
+
+def model_flops(arch: str, shape_name: str, devices: int) -> float:
+    """Ideal useful FLOPs per device for the cell."""
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    total, active = _param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens / devices
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch / devices
+
+
+def ideal_decode_bytes(arch: str, shape_name: str, devices: int) -> float:
+    """Decode is memory-bound by construction: the per-step floor is reading
+    the active weights once plus the KV/SSM state for each sequence."""
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    _, active = _param_counts(cfg)
+    weight_bytes = 2.0 * active                       # bf16
+    if cfg.family in ("ssm", "hybrid"):
+        state = cfg.n_layers * cfg.d_inner * max(cfg.ssm_state, 1) * 4.0
+        kv_bytes = state * shape.global_batch
+        if cfg.family == "hybrid":
+            napp = cfg.n_layers // cfg.attn_every
+            kv_bytes += (napp * 2 * cfg.n_kv_heads * cfg.head_dim
+                         * shape.seq_len * 2.0 * shape.global_batch)
+    else:
+        layers_with_kv = cfg.n_layers
+        window = cfg.sliding_window
+        if window and cfg.local_global_every:
+            n_glob = cfg.n_layers // cfg.local_global_every
+            n_loc = cfg.n_layers - n_glob
+            eff = n_glob * shape.seq_len + n_loc * min(window,
+                                                       shape.seq_len)
+            kv_bytes = (2 * cfg.n_kv_heads * cfg.head_dim * eff * 2.0
+                        * shape.global_batch)
+        else:
+            kv_bytes = (layers_with_kv * 2 * cfg.n_kv_heads * cfg.head_dim
+                        * shape.seq_len * 2.0 * shape.global_batch)
+    return (weight_bytes + kv_bytes) / devices
+
+
+def analyze(report: dict) -> list[dict]:
+    rows = []
+    for key, cell in sorted(report.items()):
+        arch, shape_name, mesh = key.split("|")
+        if mesh != "single" or cell.get("status") != "ok":
+            continue
+        cost = cell.get("per_device_cost") or cell["raw_cost"]
+        raw = cell["raw_cost"]
+        # probe extrapolation can under-shoot on tiny decode cells (per-layer
+        # deltas below HLO noise); clamp to the raw (counted-once) floor
+        compute = max(cost["flops"], raw["flops"]) / PEAK_FLOPS
+        memory = max(cost["bytes_accessed"],
+                     raw["bytes_accessed"]) / HBM_BW
+        collective = max(cost["collective_bytes"], 0.0) / ICI_BW
+        serial = compute + memory + collective
+        overlapped = max(compute, memory, collective)
+        ideal = model_flops(arch, shape_name, cell["devices"]) / PEAK_FLOPS
+        from repro.configs.base import SHAPES
+        if SHAPES[shape_name].kind == "decode":
+            # decode's floor is the weight+state read, not flops
+            ideal = max(ideal, ideal_decode_bytes(
+                arch, shape_name, cell["devices"]) / HBM_BW)
+        dominant = max(
+            (("compute", compute), ("memory", memory),
+             ("collective", collective)), key=lambda kv: kv[1])[0]
+        rows.append({
+            "arch": arch, "shape": shape_name,
+            "compute_s": compute, "memory_s": memory,
+            "collective_s": collective,
+            "serial_s": serial, "overlapped_s": overlapped,
+            "dominant": dominant,
+            "ideal_s": ideal,
+            "model_vs_hlo_flops": (ideal * PEAK_FLOPS) / max(cost["flops"],
+                                                             1.0),
+            "roofline_fraction": ideal / overlapped if overlapped else 0.0,
+            "peak_hbm_gib": cell["per_device"]["peak_hbm_bytes"] / 2**30,
+        })
+    return rows
+
+
+def print_summary(report_path=REPORT) -> None:
+    report = json.loads(pathlib.Path(report_path).read_text())
+    rows = analyze(report)
+    if not rows:
+        print("# roofline: no single-pod cells in report yet")
+        return
+    print("\n# Roofline (single-pod 16x16; seconds per step per device)")
+    hdr = (f"{'arch':28s}{'shape':13s}{'compute':>10s}{'memory':>10s}"
+           f"{'collect':>10s}{'dominant':>11s}{'overlap':>10s}"
+           f"{'ideal':>10s}{'frac':>6s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:28s}{r['shape']:13s}"
+              f"{r['compute_s']:10.4f}{r['memory_s']:10.4f}"
+              f"{r['collective_s']:10.4f}{r['dominant']:>11s}"
+              f"{r['overlapped_s']:10.4f}{r['ideal_s']:10.4f}"
+              f"{r['roofline_fraction']:6.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default=str(REPORT))
+    args = ap.parse_args()
+    print_summary(args.report)

@@ -1,0 +1,37 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,value,paper_value,match`` CSV for every reproduced paper
+table/figure, followed by the roofline summary (if a dry-run report exists).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+
+    rows = paper_tables.run_all()
+    print("name,value,paper_value,match")
+    bad = 0
+    for name, value, paper, ok in rows:
+        pv = "" if paper is None else f"{paper:g}"
+        print(f"{name},{value:.6g},{pv},{'OK' if ok else 'MISMATCH'}")
+        bad += 0 if ok else 1
+
+    # roofline summary from the dry-run artifact, if present
+    try:
+        from benchmarks import roofline
+        roofline.print_summary()
+    except Exception as e:  # dry-run not yet executed — not an error here
+        print(f"# roofline: no dry-run report ({e})", file=sys.stderr)
+
+    if bad:
+        print(f"# {bad} MISMATCH rows", file=sys.stderr)
+        sys.exit(1)
+    print("# all paper-claim checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Batched serving example: prefill + lockstep decode with KV caches.
+
+Serves a reduced glm4-9b (GQA kv=2) and a reduced falcon-mamba-7b (pure SSM
+— O(1) decode state) side by side to show the engine is family-agnostic.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model as model_lib
+from repro.serve.engine import Engine, ServeConfig
+
+
+def serve(arch: str, n_requests: int = 4, max_new: int = 24):
+    cfg = registry.get(arch).reduced()
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.key(0))
+    engine = Engine(model, params,
+                    ServeConfig(max_batch=n_requests, max_len=128,
+                                temperature=0.7, seed=13))
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(2, cfg.vocab_size,
+                                 size=int(rng.integers(4, 16))))
+               for _ in range(n_requests)]
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new=max_new)
+    dt = time.perf_counter() - t0
+    new_tokens = sum(len(o) - len(p) for o, p in zip(outs, prompts))
+    print(f"[{arch}] {n_requests} requests, {new_tokens} new tokens "
+          f"in {dt:.2f}s ({new_tokens/dt:.1f} tok/s on CPU)")
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"  req{i}: ...{o[len(p):][:8]}")
+
+
+if __name__ == "__main__":
+    serve("glm4-9b")
+    serve("falcon-mamba-7b")

@@ -1,0 +1,29 @@
+"""Architecture registry: ``get("gemma2-9b")`` -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "musicgen-medium": "musicgen_medium",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "gemma3-1b": "gemma3_1b",
+    "granite-3-2b": "granite_3_2b",
+    "gemma2-9b": "gemma2_9b",
+    "glm4-9b": "glm4_9b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG

@@ -1,0 +1,86 @@
+"""Gradient compression for slow (cross-pod) links, with error feedback.
+
+At 1000+ node scale the cross-pod data-parallel all-reduce rides the slowest
+links; int8 block-quantized all-reduce cuts those bytes 4x (per gradient)
+while error-feedback keeps the optimizer unbiased in the long run:
+
+    e      <- residual carried from last step
+    g_hat  <- quantize(g + e)
+    e'     <- (g + e) - dequantize(g_hat)
+    g_out  <- psum(g_hat) / n
+
+Used by ``train_step`` for the 'pod' mesh axis when
+``TrainSettings.compress_pod_grads`` is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _blockify(x: jax.Array) -> tuple[jax.Array, tuple[int, ...], int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), x.shape, pad
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """int8 block quantization -> (codes int8 (N, BLOCK), scales f32 (N,))."""
+    blocks, _, _ = _blockify(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize(codes: jax.Array, scale: jax.Array, shape: tuple[int, ...],
+               dtype) -> jax.Array:
+    flat = (codes.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape).astype(dtype)
+
+
+def psum_compressed(grad: jax.Array, err: jax.Array, axis_name: str
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce of one gradient leaf over axis_name.
+
+    Returns (mean gradient, new error residual).  The int8 codes are summed
+    in int32 (no overflow for axis sizes < 2^23) so only 1 byte/element +
+    4/BLOCK bytes of scale ride the slow link.
+    """
+    g = grad.astype(jnp.float32) + err.astype(jnp.float32)
+    codes, scale = quantize(g)
+    new_err = g - dequantize(codes, scale, grad.shape, jnp.float32)
+    # all-gather the int8 codes (+ tiny f32 block scales): 1 byte/element on
+    # the slow link instead of 4, exact mean after local dequantization
+    codes_all = jax.lax.all_gather(codes, axis_name)        # (n, N, B) int8
+    scales_all = jax.lax.all_gather(scale, axis_name)       # (n, N) f32
+    n = jax.lax.psum(1, axis_name)
+    summed = jnp.einsum("rnb,rn->nb", codes_all.astype(jnp.float32),
+                        scales_all)
+    flat = (summed / n).reshape(-1)
+    size = 1
+    for s in grad.shape:
+        size *= s
+    mean = flat[:size].reshape(grad.shape).astype(grad.dtype)
+    return mean, new_err.astype(grad.dtype)
+
+
+def tree_psum_compressed(grads, errs, axis_name: str):
+    out = jax.tree.map(lambda g, e: psum_compressed(g, e, axis_name),
+                       grads, errs)
+    new_grads = jax.tree.map(lambda _, o: o[0], grads, out)
+    new_errs = jax.tree.map(lambda _, o: o[1], grads, out)
+    return new_grads, new_errs
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)

@@ -1,0 +1,128 @@
+"""pLUTo operation model and multi-bit op composition (paper Fig 7).
+
+pLUTo [MICRO'22] computes with in-DRAM lookup tables; a single subarray holds
+the LUT for a 4-bit add or a 4-bit multiply (paper Sec IV-D).  Wider ops are
+composed from 4-bit LUT ops distributed across subarrays, which forces
+inter-subarray data movement *inside* a single N-bit operation:
+
+ADD (N bits = k nibbles), carry-select composition
+    1. every nibble-subarray computes (sum|cin=0, sum|cin=1): 2 LUT passes,
+       fully parallel across the k subarrays;
+    2. a designated aggregator subarray consumes the k results in sequence,
+       resolving the carry with a small select-LUT pass per nibble.
+    With LISA, each hand-off is a blocking RBM copy that stalls the aggregator;
+    with Shared-PIM the hand-off rides the BK-bus while the aggregator keeps
+    selecting (2 shared rows => transmit/receive overlap), so only
+    max(t_bus, t_select) is paid per nibble in steady state.
+
+MUL (N bits = k nibbles), partial-product tree
+    1. all k^2 4-bit partial products in parallel (one LUT pass);
+    2. a binary reduction tree of depth 2*log2(k) of add/shift passes, each
+       level separated by an inter-subarray hand-off.
+
+Latency model (mode m in {LISA, SHARED_PIM}; t_mv(m) the 8KB row hand-off):
+
+    T_add(k, m) = 2*T_ADD4 + (k-1) * step_add(m)
+        step_add(LISA) = t_lisa + T_SEL          (copy stalls the aggregator)
+        step_add(SP)   = max(t_bus, T_SEL)       (+ one t_bus pipeline fill)
+    T_mul(k, m) = T_MUL4 + depth(k) * step_mul(m),  depth(k) = 2*log2(k)
+        step_mul(LISA) = t_lisa + T_TREEADD
+        step_mul(SP)   = max(t_bus, T_TREEADD)   (+ one t_bus pipeline fill)
+
+Calibration: this paper does not restate pLUTo's absolute per-LUT-pass
+latencies, so the four pass-latency constants below are fitted so that the
+composition model lands exactly on the paper's *claimed* improvements
+(Sec IV-D): +18% for 32-bit add, +31% for 32-bit mul, +40% for both at
+128 bits.  The transfer latencies are NOT fitted — they come straight from
+the Table II / Table IV command models (LISA 260.5 ns, BK-bus 52.75 ns; the
+paper's own DDR4 SPICE re-run, Table IV, confirms the DDR3-derived transfer
+numbers carry over unchanged).  16/64-bit points are then *predictions* of
+the model (8.9% / 29.1% add, 24.0% / 36.1% mul) — monotone in bit width as in
+the paper's Fig 7.
+"""
+
+from __future__ import annotations
+
+import enum
+import math
+
+from repro.core import copy_models, timing
+
+
+class Interconnect(enum.Enum):
+    LISA = "lisa"
+    SHARED_PIM = "shared_pim"
+
+
+# Row hand-off latencies (ns) — from the command models, NOT fitted.
+T_MOVE_LISA = copy_models.lisa_copy(distance=1).latency_ns        # 260.5
+T_MOVE_BUS = copy_models.sharedpim_copy().latency_ns              # 52.75
+
+# LUT pass latencies (ns) — fitted to the paper's claimed Fig-7 improvements
+# (see module docstring).  Solving the two-point systems exactly:
+T_ADD4 = 3428.48      # 4-bit add LUT pass (512-entry sweep incl. carry-in)
+T_SEL = 165.30        # carry-select merge pass (small LUT)
+T_MUL4 = 2608.42      # 4-bit multiply LUT pass (256-entry sweep)
+T_TREEADD = 116.72    # partial-product tree add/shift pass
+
+# Per-op energy (J) for application-level accounting.  Transfer energy is the
+# validated quantity (Table II); LUT-pass energy uses the row-activation
+# coefficient times the equivalent number of row activations per pass.
+E_MOVE_LISA = copy_models.lisa_copy(distance=1).energy_j
+E_MOVE_BUS = copy_models.sharedpim_copy().energy_j
+E_LUT_PASS = 8 * timing.E_ACT_ROW   # one LUT sweep ~ 8 row-activation equiv.
+
+
+def nibbles(bits: int) -> int:
+    if bits % 4 != 0 or bits < 4:
+        raise ValueError(f"bit width must be a positive multiple of 4: {bits}")
+    return bits // 4
+
+
+def add_latency_ns(bits: int, mode: Interconnect) -> float:
+    """Latency of an N-bit pLUTo addition under the given interconnect."""
+    k = nibbles(bits)
+    if k == 1:
+        return T_ADD4
+    if mode is Interconnect.LISA:
+        return 2 * T_ADD4 + (k - 1) * (T_MOVE_LISA + T_SEL)
+    return 2 * T_ADD4 + T_MOVE_BUS + (k - 1) * max(T_MOVE_BUS, T_SEL)
+
+
+def mul_latency_ns(bits: int, mode: Interconnect) -> float:
+    """Latency of an N-bit pLUTo multiplication under the given interconnect."""
+    k = nibbles(bits)
+    if k == 1:
+        return T_MUL4
+    depth = 2 * int(math.log2(k))
+    if mode is Interconnect.LISA:
+        return T_MUL4 + depth * (T_MOVE_LISA + T_TREEADD)
+    return T_MUL4 + T_MOVE_BUS + depth * max(T_MOVE_BUS, T_TREEADD)
+
+
+def improvement(bits: int, op: str) -> float:
+    """Fractional latency improvement of Shared-PIM over LISA for one op."""
+    f = add_latency_ns if op == "add" else mul_latency_ns
+    lisa = f(bits, Interconnect.LISA)
+    sp = f(bits, Interconnect.SHARED_PIM)
+    return 1.0 - sp / lisa
+
+
+def fig7_table() -> dict[tuple[str, int], dict[str, float]]:
+    """Reproduce Fig 7: latency per (op, bits) per interconnect + improvement."""
+    out: dict[tuple[str, int], dict[str, float]] = {}
+    for op, f in (("add", add_latency_ns), ("mul", mul_latency_ns)):
+        for bits in (16, 32, 64, 128):
+            out[(op, bits)] = {
+                "lisa_ns": f(bits, Interconnect.LISA),
+                "shared_pim_ns": f(bits, Interconnect.SHARED_PIM),
+                "improvement": improvement(bits, op),
+            }
+    return out
+
+
+# 32-bit composite op latencies, consumed by the application-level scheduler
+# (paper Sec IV-D: "All the computations in these benchmark programs use
+# 32-bit operations").
+def op32_latency_ns(op: str, mode: Interconnect) -> float:
+    return (add_latency_ns if op == "add" else mul_latency_ns)(32, mode)

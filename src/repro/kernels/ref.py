@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lut_matmul import GROUP
+
+
+def lut_matmul_ref(x: jax.Array, codes: jax.Array, lut: jax.Array
+                   ) -> jax.Array:
+    """Dequantize the whole weight matrix, then plain matmul."""
+    K, N = codes.shape
+    g = K // GROUP
+    c = codes.reshape(g, GROUP, N).astype(jnp.int32)
+    w = jnp.take_along_axis(lut.transpose(0, 2, 1), c, axis=1)
+    w = w.reshape(K, N)
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Materialized-scores attention oracle."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    ok = jnp.ones((Tq, Tk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(decay, u, c):
+    """Sequential-scan oracle for the selective scan."""
+    def step(h, xs):
+        d, uu, cc = xs
+        h = d * h + uu
+        return h, (h * cc[None, :]).sum(axis=1)
+
+    B, T, D, N = decay.shape
+    h0 = jnp.zeros((D, N), jnp.float32)
+
+    def per_batch(db, ub, cb):
+        _, y = jax.lax.scan(step, h0, (db, ub, cb))
+        return y
+
+    return jax.vmap(per_batch)(decay.astype(jnp.float32),
+                               u.astype(jnp.float32),
+                               c.astype(jnp.float32))

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For each cell this lowers the appropriate step function (train_step for
+# train shapes, prefill for prefill shapes, decode_step for decode shapes)
+# against ShapeDtypeStruct inputs on the production mesh, compiles it, and
+# records memory_analysis / cost_analysis / per-collective byte counts
+# parsed from the optimized HLO into ``reports/dryrun.json`` (incremental:
+# existing cells are skipped unless --force).
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+#         [--mesh single|multi|both] [--force]
+# (no `from __future__` import here: the XLA_FLAGS lines must be the very
+# first statements, before any import that could initialize jax)
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch import specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.sharding import partition
+from repro.sharding.context import use_mesh
+from repro.train import train_step as ts
+
+REPORT = pathlib.Path(__file__).resolve().parents[3] / "reports" / \
+    "dryrun.json"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def _shape_bytes(txt: str) -> int:
+    """Max element-shape bytes in a (possibly tuple) HLO shape string."""
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _BYTES[dt])
+    return best
+
+
+def collective_bytes(hlo: str) -> dict[str, dict[str, float]]:
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    out: dict[str, dict[str, float]] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        # match '  name = <shape> opcode(' with opcode a collective
+        m = re.match(r"^[%\w.\-]*\s*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+                     r"([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_txt, opcode = m.groups()
+        if opcode.endswith("-done"):
+            continue  # async pair: counted at the -start op
+        base = opcode.removesuffix("-start")
+        if base in COLLECTIVES:
+            d = out.setdefault(base, {"count": 0, "bytes": 0.0})
+            d["count"] += 1
+            d["bytes"] += _shape_bytes(shape_txt)
+    return out
+
+
+def layer_group(cfg) -> int:
+    """Scan-group granularity: the unit by which n_layers can be reduced."""
+    return max(cfg.local_global_every, cfg.cross_attn_every, cfg.attn_every,
+               cfg.moe_every, 1)
+
+
+# config overrides applied by --set (the §Perf variant mechanism)
+CONFIG_OVERRIDES: dict = {}
+
+
+def _apply_overrides(cfg):
+    if not CONFIG_OVERRIDES:
+        return cfg
+    coerced = {}
+    for k, v in CONFIG_OVERRIDES.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            coerced[k] = v in ("1", "true", "True", True)
+        elif isinstance(cur, int):
+            coerced[k] = int(v)
+        elif isinstance(cur, float):
+            coerced[k] = float(v)
+        else:
+            coerced[k] = v
+    return dataclasses.replace(cfg, **coerced)
+
+
+def build_cell(arch: str, shape_name: str, mesh, n_layers: int | None = None
+               ) -> tuple:
+    """Returns (jitted_fn, example_args) for the cell.
+
+    ``n_layers`` overrides the layer count (cost probes — XLA cost_analysis
+    counts scan bodies once, so per-layer costs are recovered by compiling
+    two probe depths and extrapolating; see EXPERIMENTS.md Sec Roofline).
+    """
+    cfg = _apply_overrides(registry.get(arch))
+    if n_layers is not None:
+        # probe: fewer layers, FULLY UNROLLED so cost_analysis sees each one
+        cfg = dataclasses.replace(cfg, n_layers=n_layers, unroll_layers=True)
+    shape = SHAPES[shape_name]
+    model = model_lib.build(cfg)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(
+            state_bits=8 if cfg.name.startswith("llama4") else 32)
+        settings = ts.TrainSettings()
+        state_shape = jax.eval_shape(
+            lambda: ts.make_train_state(model, opt_cfg,
+                                        jax.random.key(0), settings))
+        state_shardings = partition.param_shardings(state_shape, mesh)
+        batch = specs.train_batch_specs(cfg, shape)
+        batch_shardings = partition.batch_shardings(batch, mesh,
+                                                    shape.global_batch)
+        step = ts.make_train_step(model, opt_cfg, settings)
+        fn = jax.jit(step,
+                     in_shardings=(state_shardings, batch_shardings),
+                     out_shardings=(state_shardings, None),
+                     donate_argnums=(0,))
+        return fn, (state_shape, batch)
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    param_shardings = partition.param_shardings(params_shape, mesh)
+    if shape.kind == "prefill":
+        cache, inputs = specs.prefill_input_specs(cfg, model, shape)
+    else:
+        cache, inputs = specs.decode_input_specs(cfg, model, shape)
+    cache_shardings = partition.cache_shardings(cache, mesh,
+                                                shape.global_batch)
+    tok_sharding = partition.batch_shardings(
+        {"tokens": inputs["tokens"]}, mesh, shape.global_batch)["tokens"]
+    media = inputs["media"]
+    media_shardings = (partition.batch_shardings(
+        {"m": media}, mesh, shape.global_batch)["m"] if media is not None
+        else None)
+
+    if shape.kind == "prefill":
+        def fn_(params, cache, tokens, media):
+            return model_lib.Model(cfg).prefill(params, cache, tokens, media)
+    else:
+        def fn_(params, cache, tokens, media):
+            return model_lib.Model(cfg).decode_step(params, cache, tokens,
+                                                    media)
+    fn = jax.jit(fn_, in_shardings=(param_shardings, cache_shardings,
+                                    tok_sharding, media_shardings),
+                 donate_argnums=(1,))
+    return fn, (params_shape, cache, inputs["tokens"], media)
+
+
+def _compile_and_measure(arch, shape_name, mesh, n_layers=None) -> dict:
+    fn, args = build_cell(arch, shape_name, mesh, n_layers=n_layers)
+    with use_mesh(mesh):
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "collective_bytes": sum(d["bytes"] for d in coll.values()),
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_bytes": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes),
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             probes: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = _apply_overrides(registry.get(arch))
+    ok, reason = shape_applicable(cfg, SHAPES[shape_name])
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+    t0 = time.time()
+    full = _compile_and_measure(arch, shape_name, mesh)
+    result = {
+        "status": "ok",
+        "mesh": mesh_kind,
+        "devices": int(mesh.devices.size),
+        "n_layers": cfg.n_layers,
+        "per_device": full["mem"],
+        "raw_cost": {k: full[k] for k in
+                     ("flops", "bytes_accessed", "collective_bytes",
+                      "collectives")},
+    }
+    if probes and mesh_kind == "single":
+        # XLA counts scan bodies once -> recover per-layer costs from two
+        # probe depths (1 and 2 scan groups) and extrapolate to n_layers.
+        g = layer_group(cfg)
+        p1 = _compile_and_measure(arch, shape_name, mesh, n_layers=g)
+        p2 = _compile_and_measure(arch, shape_name, mesh, n_layers=2 * g)
+        n_groups = cfg.n_layers // g
+        def extrap(key):
+            per_group = p2[key] - p1[key]
+            return p1[key] + per_group * (n_groups - 1)
+        result["probe"] = {
+            "group_size": g,
+            "p1": {k: p1[k] for k in ("flops", "bytes_accessed",
+                                      "collective_bytes")},
+            "p2": {k: p2[k] for k in ("flops", "bytes_accessed",
+                                      "collective_bytes")},
+        }
+        result["per_device_cost"] = {
+            "flops": extrap("flops"),
+            "bytes_accessed": extrap("bytes_accessed"),
+            "collective_bytes": extrap("collective_bytes"),
+        }
+    result["compile_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report", default=str(REPORT))
+    ap.add_argument("--set", default="", help="cfg overrides a=b,c=d")
+    ap.add_argument("--tag", default="", help="report-key suffix for variants")
+    args = ap.parse_args()
+    if args.set:
+        CONFIG_OVERRIDES.update(
+            dict(kv.split("=", 1) for kv in args.set.split(",")))
+
+    report_path = pathlib.Path(args.report)
+    report_path.parent.mkdir(parents=True, exist_ok=True)
+    report = json.loads(report_path.read_text()) if report_path.exists() \
+        else {}
+
+    archs = [args.arch] if args.arch else list(registry.ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape_name}|{mesh_kind}"
+                if args.tag:
+                    key += f"|{args.tag}"
+                if key in report and report[key].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    continue
+                print(f"=== {key}", flush=True)
+                try:
+                    result = run_cell(arch, shape_name, mesh_kind)
+                except Exception as e:
+                    result = {"status": "error",
+                              "error": f"{type(e).__name__}: {e}",
+                              "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                    print(f"    ERROR {e}", flush=True)
+                else:
+                    if result["status"] == "ok":
+                        pd = result["per_device"]
+                        c = result.get("per_device_cost",
+                                       result["raw_cost"])
+                        print(f"    ok in {result['compile_s']}s  "
+                              f"peak/dev={pd['peak_hbm_bytes']/2**30:.2f}GiB"
+                              f"  flops/dev={c['flops']:.3e}  "
+                              f"coll/dev={c['collective_bytes']:.3e}B",
+                              flush=True)
+                    else:
+                        print(f"    {result['status']}: "
+                              f"{result.get('reason','')}", flush=True)
+                report[key] = result
+                report_path.write_text(json.dumps(report, indent=1,
+                                                  sort_keys=True))
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input per (arch, shape) cell.
+
+Weak-type-correct, shardable, and allocation-free — the dry-run lowers
+against these.  For decode shapes the cache structs represent a FULL KV/SSM
+cache of ``seq_len`` (the cell's defining workload: one new token against a
+seq_len cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, T = shape.global_batch, shape.seq_len
+    out = {"tokens": sds((B, T), jnp.int32)}
+    if cfg.n_media_tokens:
+        out["media"] = sds((B, cfg.n_media_tokens, cfg.media_embed_dim),
+                           jnp.float32)
+    return out
+
+
+def cache_specs(model: Model, batch: int, max_len: int) -> dict:
+    """eval_shape of init_cache — no allocation."""
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def decode_input_specs(cfg: ModelConfig, model: Model, shape: ShapeConfig
+                       ) -> tuple[dict, dict]:
+    B = shape.global_batch
+    cache = cache_specs(model, B, shape.seq_len)
+    tokens = sds((B, 1), jnp.int32)
+    media = (sds((B, cfg.n_media_tokens, cfg.media_embed_dim), jnp.float32)
+             if cfg.n_media_tokens else None)
+    return cache, {"tokens": tokens, "media": media}
+
+
+def prefill_input_specs(cfg: ModelConfig, model: Model, shape: ShapeConfig
+                        ) -> tuple[dict, dict]:
+    B, T = shape.global_batch, shape.seq_len
+    cache_len = T + (cfg.n_media_tokens if cfg.family == "audio" else 0)
+    cache = cache_specs(model, B, cache_len)
+    tokens = sds((B, T), jnp.int32)
+    media = (sds((B, cfg.n_media_tokens, cfg.media_embed_dim), jnp.float32)
+             if cfg.n_media_tokens else None)
+    return cache, {"tokens": tokens, "media": media}

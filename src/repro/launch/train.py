@@ -1,0 +1,75 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --steps 50 --batch 8 --seq 128 --smoke
+
+``--smoke`` swaps in the reduced config so the run fits a laptop/CI CPU; on
+real fleets the same entry point runs the full config on the production mesh
+(jax.distributed handles multi-host initialization externally).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.sharding import partition
+from repro.train import train_step as ts
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b",
+                    choices=list(registry.ARCHS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = model_lib.build(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(1, args.steps // 10))
+    settings = ts.TrainSettings(microbatches=args.microbatches)
+
+    mesh = make_host_mesh()
+    state = ts.make_train_state(model, opt_cfg, jax.random.key(0), settings)
+    state_shardings = partition.param_shardings(
+        jax.eval_shape(lambda: state), mesh)
+    step = jax.jit(ts.make_train_step(model, opt_cfg, settings),
+                   out_shardings=(state_shardings, None),
+                   donate_argnums=(0,))
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch,
+                          n_media_tokens=cfg.n_media_tokens,
+                          media_embed_dim=cfg.media_embed_dim)
+    trainer = Trainer(step, state, data_cfg, args.ckpt_dir,
+                      TrainerConfig(total_steps=args.steps,
+                                    checkpoint_every=args.ckpt_every,
+                                    log_every=max(1, args.steps // 10)))
+    result = trainer.run()
+    for m in result["metrics"]:
+        print(f"step {m['step']:6d}  loss {m['loss']:.4f}  "
+              f"{m['sec_per_step']*1e3:.0f} ms/step")
+    print(f"finished at step {result['final_step']}; "
+          f"straggler breaches: {result['straggler_breaches']}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Shared transformer layer primitives (pure functional JAX).
+
+Everything here is config-driven and shape-polymorphic so one implementation
+serves all ten assigned architectures: RMSNorm, RoPE, GQA attention with an
+online-softmax KV-block scan (causal, sliding-window, logit softcap — no
+O(T^2) mask materialization), and (Sw/Ge)GLU MLPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# --- initialization helpers ------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_shape: tuple[int, ...], dtype) -> jax.Array:
+    scale = 1.0 / (in_dim ** 0.5)
+    return (jax.random.normal(key, (in_dim, *out_shape), jnp.float32)
+            * scale).astype(dtype)
+
+
+# --- norms -----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# --- rotary embeddings ----------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embeddings.  x: (..., T, H, Dh); positions: (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(s: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(s / cap) if cap > 0.0 else s
+
+
+# --- attention -------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    window: int = 0               # >0: sliding window size
+    softcap: float = 0.0
+    kv_block: int = 512
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              spec: AttnSpec, *,
+              q_offset: jax.Array | int = 0,
+              is_global: jax.Array | bool = True,
+              kv_len: jax.Array | None = None) -> jax.Array:
+    """Online-softmax attention over KV blocks.
+
+    q: (B, Tq, H, Dh); k, v: (B, Tk, K, Dh).  Causal with optional sliding
+    window (disabled when ``is_global``) and logit soft-capping.  ``q_offset``
+    is the absolute position of q[0] (decode: cache length so far).
+    ``kv_len`` masks out cache positions >= kv_len.  Memory is O(Tq * block),
+    never O(Tq * Tk) — required for 32k prefill and 500k decode.
+    """
+    B, Tq, H, Dh = q.shape
+    _, Tk, K, _ = k.shape
+    G = H // K
+    blk = min(spec.kv_block, Tk)
+    nblk = -(-Tk // blk)
+    pad = nblk * blk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = Dh ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Tq, K, G, Dh)
+    kb = k.reshape(B, nblk, blk, K, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, blk, K, Dh).transpose(1, 0, 2, 3, 4)
+    qpos = (jnp.asarray(q_offset) + jnp.arange(Tq))                  # (Tq,)
+    limit = jnp.asarray(Tk if kv_len is None else kv_len)
+    glob = jnp.asarray(is_global)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, kstart = inp
+        s = jnp.einsum("btkgd,bskd->btkgs", qg,
+                       kblk.astype(jnp.float32))                     # B,Tq,K,G,blk
+        s = _softcap(s, spec.softcap)
+        kpos = kstart + jnp.arange(blk)                              # (blk,)
+        delta = qpos[:, None] - kpos[None, :]                        # (Tq, blk)
+        ok = (delta >= 0) & (kpos[None, :] < limit)
+        if spec.window > 0:
+            ok &= glob | (delta < spec.window)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "btkgs,bskd->btkgd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Tq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, K, G, Dh), jnp.float32)
+    starts = jnp.arange(nblk) * blk
+    # flash-attention backward semantics: recompute the (Tq, blk) score
+    # blocks in the VJP instead of saving them — without this the scan
+    # stores O(Tq * Tk) fp32 per layer and 32k prefill cannot fit
+    body = jax.checkpoint(body)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Tq, H, Dh).astype(q.dtype)
+
+
+def init_attn_params(key, d_model: int, spec: AttnSpec, dtype,
+                     qk_norm: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, (spec.n_heads, spec.head_dim), dtype),
+        "wk": dense_init(ks[1], d_model, (spec.n_kv_heads, spec.head_dim),
+                         dtype),
+        "wv": dense_init(ks[2], d_model, (spec.n_kv_heads, spec.head_dim),
+                         dtype),
+        "wo": dense_init(ks[3], spec.n_heads * spec.head_dim, (d_model,),
+                         dtype).reshape(spec.n_heads, spec.head_dim, d_model),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((spec.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((spec.head_dim,), dtype)
+    return p
+
+
+def attn_block(params: Params, x: jax.Array, spec: AttnSpec, *,
+               rope_theta: float, norm_eps: float,
+               positions: jax.Array,
+               is_global: jax.Array | bool = True,
+               kv_cache: tuple[jax.Array, jax.Array] | None = None,
+               cache_len: jax.Array | None = None,
+               xkv: jax.Array | None = None,
+               use_rope: bool = True,
+               constrain_dp: bool = False,
+               ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Projections + (cached) attention.  Returns (out, (k_all, v_all)).
+
+    * training/prefill: ``kv_cache`` is None -> attends within x.
+    * decode: ``kv_cache`` holds (B, S, K, Dh); x is the new token(s); the
+      cache is updated at ``cache_len``.
+    * cross-attention: ``xkv`` supplies the key/value source sequence.
+    """
+    src = x if xkv is None else xkv
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if constrain_dp:
+        # DP-stationary projections: force weight gathers over the fsdp
+        # axis rather than partial-sum all-reduces of activations
+        from repro.sharding.context import constrain
+        q = constrain(q, ("pod", "data"), None, None, None)
+        k = constrain(k, ("pod", "data"), None, None, None)
+        v = constrain(v, ("pod", "data"), None, None, None)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], 1e-6)
+        k = rms_norm(k, params["k_norm"], 1e-6)
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        kpos = positions if kv_cache is None else positions
+        k = rope(k, kpos, rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        pos = cache_len if cache_len is not None else 0
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        out = attention(q, ck, cv, spec, q_offset=pos, is_global=is_global,
+                        kv_len=pos + x.shape[1])
+        k_all, v_all = ck, cv
+    elif xkv is not None:
+        # cross-attention: no causal mask — emulate by huge offset
+        out = attention(q, k, v, spec, q_offset=src.shape[1],
+                        is_global=True)
+        k_all, v_all = k, v
+    else:
+        out = attention(q, k, v, spec, q_offset=0, is_global=is_global)
+        k_all, v_all = k, v
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]), (k_all, v_all)
+
+
+# --- MLP -------------------------------------------------------------------------
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], d_model, (d_ff,), dtype),
+        "wi_up": dense_init(ks[1], d_model, (d_ff,), dtype),
+        "wo": dense_init(ks[2], d_ff, (d_model,), dtype),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_block(params: Params, x: jax.Array, act: str,
+              overlap: bool = False, constrain_dp: bool = False
+              ) -> jax.Array:
+    """(Sw/Ge)GLU FFN.
+
+    With ``overlap=True`` (config.overlap == "shared_bus") and an active
+    mesh, the tensor-parallel matmuls run as Shared-PIM-style rings
+    (``core.overlap.collective_matmul``): the blocking all-gather /
+    reduce-scatter around the two matmuls become double-buffered ppermute
+    streams overlapped with the MXU work.
+    """
+    if overlap:
+        from repro.core.overlap.collective_matmul import overlapped_ffn
+        from repro.sharding.context import current_mesh
+        mesh = current_mesh()
+        tp = (dict(zip(mesh.axis_names, mesh.shape.values())).get("model", 1)
+              if mesh is not None else 1)
+        f = params["wi_gate"].shape[-1]
+        if (mesh is not None and tp > 1 and x.shape[1] % tp == 0
+                and f % tp == 0):
+            return overlapped_ffn(
+                x, params["wi_gate"], params["wi_up"], params["wo"], mesh,
+                lambda v: _act(v, act))
+    g = _act(jnp.einsum("btd,df->btf", x, params["wi_gate"]), act)
+    u = jnp.einsum("btd,df->btf", x, params["wi_up"])
+    if constrain_dp:
+        # pin hidden activations to pure-DP: XLA must gather the (small)
+        # weights instead of all-reducing (large) partial activation sums
+        from repro.sharding.context import constrain
+        g = constrain(g, ("pod", "data"), None, None)
+        u = constrain(u, ("pod", "data"), None, None)
+    return jnp.einsum("btf,fd->btd", g * u, params["wo"])
+
+
+# --- cross-attention query mask fix ----------------------------------------------
+# (cross attention uses q_offset=len(src) so every source position passes the
+# causal test: delta = q_offset + t - kpos >= 0 for all kpos < len(src))
+
+
+# --- remat policies ---------------------------------------------------------------
+
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    raise ValueError(f"unknown remat policy {name!r}")
+
+
+def maybe_remat(fn, policy_name: str):
+    if policy_name == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(policy_name))

@@ -1,0 +1,638 @@
+"""Config-driven model assembly for all ten assigned architectures.
+
+``build(cfg)`` returns a ``Model`` with:
+
+* ``init(key)``                      -> params pytree (stacked layers for scan)
+* ``forward(params, batch)``         -> logits (training / prefill path)
+* ``train_loss(params, batch)``      -> scalar LM loss
+* ``init_cache(B)``                  -> decode cache pytree (KV / SSM states)
+* ``decode_step(params, cache, tok)``-> (logits, cache)  [one-token serve step]
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so the HLO
+stays compact for the 512-device dry-run; heterogeneous schedules (gemma
+local/global, zamba2 shared attention, llama-vision cross blocks) are
+expressed as scanned per-layer flags or group-structured scans — never as
+Python-unrolled towers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe, ssm
+from repro.models.layers import AttnSpec, Params
+
+
+def _stack_init(fn, key, n: int):
+    """vmap an init function over n layer keys -> stacked params."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(
+        x, i, keepdims=False), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- parameter init ----------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, 8)
+        p: Params = {
+            "embed": (jax.random.normal(keys[0],
+                                        (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = layers.dense_init(keys[1], cfg.d_model,
+                                             (cfg.vocab_size,), dtype)
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            if cfg.family == "moe" and cfg.moe_every > 1:
+                n_moe = cfg.n_layers // cfg.moe_every
+                p["blocks"] = _stack_init(
+                    lambda k: self._init_block(k, dtype, kind="dense"),
+                    keys[2], cfg.n_layers - n_moe)
+                p["moe_blocks"] = _stack_init(
+                    lambda k: self._init_block(k, dtype, kind="moe"),
+                    keys[5], n_moe)
+            else:
+                p["blocks"] = _stack_init(
+                    lambda k: self._init_block(k, dtype), keys[2],
+                    cfg.n_layers)
+        if cfg.family == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            p["cross_blocks"] = _stack_init(
+                lambda k: self._init_cross_block(k, dtype), keys[3], n_cross)
+            p["media_proj"] = layers.dense_init(
+                keys[4], cfg.media_embed_dim, (cfg.d_model,), dtype)
+        if cfg.family == "audio":
+            p["media_proj"] = layers.dense_init(
+                keys[4], cfg.media_embed_dim, (cfg.d_model,), dtype)
+        if cfg.family == "ssm":
+            p["blocks"] = _stack_init(
+                lambda k: self._init_ssm_block(k, dtype), keys[2],
+                cfg.n_layers)
+        if cfg.family == "hybrid":
+            p["blocks"] = _stack_init(
+                lambda k: self._init_ssm_block(k, dtype), keys[2],
+                cfg.n_layers)
+            p["shared_attn"] = _stack_init(
+                lambda k: self._init_shared_attn(k, dtype), keys[3],
+                cfg.n_shared_attn_blocks)
+        return p
+
+    # per-family sub-inits -------------------------------------------------
+
+
+    def _scan(self, f, init, xs):
+        """lax.scan over stacked layers; fully unrolled when the config asks
+        (dry-run cost probes — XLA cost_analysis counts while bodies once)."""
+        return jax.lax.scan(f, init, xs,
+                            unroll=True if self.cfg.unroll_layers else 1)
+
+    def _attn_spec(self) -> AttnSpec:
+        cfg = self.cfg
+        return AttnSpec(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                        window=cfg.sliding_window,
+                        softcap=cfg.attn_logit_softcap)
+
+    def _init_block(self, key, dtype, kind: str | None = None) -> Params:
+        cfg = self.cfg
+        if kind is None:
+            kind = "moe" if cfg.family == "moe" else "dense"
+        ks = jax.random.split(key, 4)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": layers.init_attn_params(ks[0], cfg.d_model,
+                                            self._attn_spec(), dtype,
+                                            qk_norm=cfg.qk_norm),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if kind == "moe":
+            p["moe"] = moe.init_moe_params(ks[1], cfg.d_model, cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff,
+                                              dtype)
+        return p
+
+    def _init_cross_block(self, key, dtype) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "ln": jnp.zeros((cfg.d_model,), dtype),
+            "attn": layers.init_attn_params(ks[0], cfg.d_model,
+                                            self._attn_spec(), dtype),
+            "gate": jnp.zeros((), jnp.float32),
+        }
+
+    def _init_shared_attn(self, key, dtype) -> Params:
+        # zamba2 shared block = attention + MLP (the mamba layers themselves
+        # carry no MLP; published total ~2.7B checks out only this way)
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "ln": jnp.zeros((cfg.d_model,), dtype),
+            "attn": layers.init_attn_params(ks[0], cfg.d_model,
+                                            self._attn_spec(), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": layers.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff,
+                                          dtype),
+        }
+
+    def _init_ssm_block(self, key, dtype) -> Params:
+        cfg = self.cfg
+        return {"ln": jnp.zeros((cfg.d_model,), dtype),
+                "mixer": ssm.init_mamba_params(key, cfg, dtype)}
+
+    # ---------------- per-layer flags ----------------
+
+    def _layer_is_global(self) -> jax.Array:
+        cfg = self.cfg
+        if cfg.sliding_window and cfg.local_global_every:
+            idx = jnp.arange(cfg.n_layers)
+            return (idx % cfg.local_global_every) == (
+                cfg.local_global_every - 1)
+        return jnp.ones((cfg.n_layers,), bool)
+
+    # ---------------- forward (train / prefill) ----------------
+
+    def embed_inputs(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        if cfg.family == "dense" and cfg.tie_embeddings or cfg.family in (
+                "audio",):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if cfg.family == "audio":
+            media = jnp.einsum("bmd,dk->bmk", batch["media"].astype(x.dtype),
+                               params["media_proj"])
+            x = jnp.concatenate([media, x], axis=1)
+        return x
+
+    def forward(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        B, T, _ = x.shape
+        positions = jnp.arange(T)[None, :].repeat(B, 0)
+        if cfg.family in ("dense", "moe", "audio"):
+            x = self._run_decoder(params, x, positions)
+        elif cfg.family == "vlm":
+            x = self._run_vlm(params, x, positions,
+                              batch["media"])
+        elif cfg.family == "ssm":
+            x = self._run_ssm(params, x)
+        elif cfg.family == "hybrid":
+            x = self._run_hybrid(params, x, positions)
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.family == "audio":
+            x = x[:, cfg.n_media_tokens:]           # strip conditioning frames
+        logits = self._unembed(params, x)
+        return logits
+
+    def _unembed(self, params: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+        if cfg.final_logit_softcap:
+            logits = (cfg.final_logit_softcap
+                      * jnp.tanh(logits / cfg.final_logit_softcap))
+        return logits
+
+    def _constrain_residual(self, x):
+        """Optionally pin the residual stream to pure-DP sharding at layer
+        boundaries so GSPMD gathers weights instead of resharding
+        activations (§Perf iteration; config.constrain_activations)."""
+        if not self.cfg.constrain_activations:
+            return x
+        from repro.sharding.context import constrain
+        return constrain(x, ("pod", "data"), None, None)
+
+    def _decoder_layer(self, blk: Params, x, positions, is_global,
+                       kv_cache=None, cache_len=None):
+        cfg = self.cfg
+        spec = self._attn_spec()
+        x = self._constrain_residual(x)
+        h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        a, kv = layers.attn_block(
+            blk["attn"], h, spec, rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps, positions=positions, is_global=is_global,
+            kv_cache=kv_cache, cache_len=cache_len,
+            use_rope=cfg.family != "audio",
+            constrain_dp=cfg.constrain_internals)
+        x = x + a
+        h = layers.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        if "moe" in blk:
+            x = x + moe.moe_block(blk["moe"], h, cfg)
+        else:
+            x = x + layers.mlp_block(blk["mlp"], h, cfg.act,
+                                     overlap=cfg.overlap == "shared_bus",
+                                     constrain_dp=cfg.constrain_internals)
+        return x, kv
+
+    def _run_decoder(self, params, x, positions):
+        cfg = self.cfg
+        flags = self._layer_is_global()
+
+        if "moe_blocks" in params:
+            # llama4-style interleave: groups of (moe_every-1 dense + 1 moe)
+            k = cfg.moe_every - 1
+            n_groups = cfg.n_layers // cfg.moe_every
+            dense = jax.tree.map(
+                lambda a: a.reshape(n_groups, k, *a.shape[1:]),
+                params["blocks"])
+
+            def group(x, inp):
+                dgrp, mblk = inp
+
+                def inner(x, blk):
+                    x, _ = self._decoder_layer(blk, x, positions, True)
+                    return x, None
+
+                x, _ = self._scan(inner, x, dgrp)
+                x, _ = self._decoder_layer(mblk, x, positions, True)
+                return x, None
+
+            group = layers.maybe_remat(group, cfg.remat_policy)
+            x, _ = self._scan(group, x, (dense, params["moe_blocks"]))
+            return x
+
+        def layer(x, inp):
+            blk, is_global = inp
+            x, _ = self._decoder_layer(blk, x, positions, is_global)
+            return x, None
+
+        layer = layers.maybe_remat(layer, cfg.remat_policy)
+        x, _ = self._scan(layer, x, (params["blocks"], flags))
+        return x
+
+    def _run_vlm(self, params, x, positions, media):
+        cfg = self.cfg
+        mtok = jnp.einsum("bmd,dk->bmk", media.astype(x.dtype),
+                          params["media_proj"])
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["blocks"])
+        flags = self._layer_is_global().reshape(n_groups, k)
+
+        def group(x, inp):
+            grp, cross, fl = inp
+
+            def self_layer(x, inner):
+                blk, g = inner
+                x, _ = self._decoder_layer(blk, x, positions, g)
+                return x, None
+
+            x, _ = self._scan(self_layer, x, (grp, fl))
+            # gated cross-attention into the (stub) vision tokens
+            h = layers.rms_norm(x, cross["ln"], cfg.norm_eps)
+            a, _ = layers.attn_block(
+                cross["attn"], h, self._attn_spec(),
+                rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                positions=positions, xkv=mtok, use_rope=False)
+            x = x + jnp.tanh(cross["gate"]).astype(x.dtype) * a
+            return x, None
+
+        group = layers.maybe_remat(group, cfg.remat_policy)
+        x, _ = self._scan(group, x, (blocks, params["cross_blocks"], flags))
+        return x
+
+    def _ssm_layer(self, blk, x, state=None):
+        cfg = self.cfg
+        mixer = ssm.mamba1_block if cfg.mamba_version == 1 else \
+            ssm.mamba2_block
+        x = self._constrain_residual(x)
+        h = layers.rms_norm(x, blk["ln"], cfg.norm_eps)
+        y, new_state = mixer(blk["mixer"], h, cfg, state=state)
+        return x + y, new_state
+
+    def _run_ssm(self, params, x):
+        def layer(x, blk):
+            x, _ = self._ssm_layer(blk, x)
+            return x, None
+
+        layer = layers.maybe_remat(layer, self.cfg.remat_policy)
+        x, _ = self._scan(layer, x, params["blocks"])
+        return x
+
+    def _run_hybrid(self, params, x, positions):
+        cfg = self.cfg
+        k = cfg.attn_every
+        n_groups = cfg.n_layers // k
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["blocks"])
+
+        def group(x, inp):
+            grp, g_idx = inp
+
+            def inner(x, blk):
+                x, _ = self._ssm_layer(blk, x)
+                return x, None
+
+            x, _ = self._scan(inner, x, grp)
+            # shared attention block, cycled over the distinct weight sets
+            sa = _take(params["shared_attn"],
+                       g_idx % cfg.n_shared_attn_blocks)
+            h = layers.rms_norm(x, sa["ln"], cfg.norm_eps)
+            a, _ = layers.attn_block(
+                sa["attn"], h, self._attn_spec(), rope_theta=cfg.rope_theta,
+                norm_eps=cfg.norm_eps, positions=positions)
+            x = x + a
+            h = layers.rms_norm(x, sa["ln2"], cfg.norm_eps)
+            x = x + layers.mlp_block(sa["mlp"], h, cfg.act,
+                                     overlap=cfg.overlap == "shared_bus")
+            return x, None
+
+        group = layers.maybe_remat(group, cfg.remat_policy)
+        x, _ = self._scan(group, x, (blocks, jnp.arange(n_groups)))
+        return x
+
+    # ---------------- loss ----------------
+
+    def train_loss(self, params: Params, batch: dict) -> jax.Array:
+        from repro.sharding.context import constrain
+        logits = self.forward(params, batch)
+        # keep the vocab dimension sharded over 'model' through the loss —
+        # unsharded fp32 logits would dominate peak HBM at 256k vocab
+        logits = constrain(logits, ("pod", "data"), None, "model")
+        labels = batch["tokens"][:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        lg = constrain(lg, ("pod", "data"), None, "model")
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    # ---------------- prefill ----------------
+
+    def prefill(self, params: Params, cache: dict, tokens: jax.Array,
+                media: jax.Array | None = None) -> tuple[jax.Array, dict]:
+        """Fill the decode cache from a (B, T) prompt; returns last-position
+        logits and the cache positioned at T."""
+        cfg = self.cfg
+        T = tokens.shape[1]
+        batch = {"tokens": tokens}
+        if media is not None:
+            batch["media"] = media
+        x = self.embed_inputs(params, batch)
+        B = x.shape[0]
+        positions = jnp.arange(x.shape[1])[None, :].repeat(B, 0)
+        flags = self._layer_is_global()
+
+        if cfg.family in ("dense", "moe", "audio"):
+            if "moe_blocks" in params:
+                x, cache = self._moe_grouped_pass(
+                    params, cache, x, positions, jnp.zeros((), jnp.int32))
+            else:
+                def layer(x, inp):
+                    blk, is_global, kc, vc = inp
+                    x, (nk, nv) = self._decoder_layer(
+                        blk, x, positions, is_global, kv_cache=(kc, vc),
+                        cache_len=jnp.zeros((), jnp.int32))
+                    return x, (nk, nv)
+
+                layer = layers.maybe_remat(layer, cfg.remat_policy)
+                x, (nk, nv) = self._scan(
+                    layer, x,
+                    (params["blocks"], flags, cache["k"], cache["v"]))
+                cache = {**cache, "k": nk, "v": nv}
+        elif cfg.family == "vlm":
+            # fill media K/V once, then run the decode-group path over T
+            cross = params["cross_blocks"]
+            mtok = jnp.einsum("bmd,dk->bmk", media.astype(x.dtype),
+                              params["media_proj"])
+            mk = jnp.einsum("bmd,gdhk->gbmhk", mtok, cross["attn"]["wk"])
+            mv = jnp.einsum("bmd,gdhk->gbmhk", mtok, cross["attn"]["wv"])
+            cache = {**cache, "media_k": mk.astype(cache["media_k"].dtype),
+                     "media_v": mv.astype(cache["media_v"].dtype)}
+            x, cache = self._decode_vlm(params, cache, x, positions, media)
+        elif cfg.family == "ssm":
+            def layer(x, inp):
+                blk, conv, h = inp
+                x, (nc, nh) = self._ssm_layer(blk, x, state=(conv, h))
+                return x, (nc, nh)
+
+            layer = layers.maybe_remat(layer, cfg.remat_policy)
+            x, (nc, nh) = self._scan(
+                layer, x, (params["blocks"], cache["conv"], cache["h"]))
+            cache = {**cache, "conv": nc, "h": nh}
+        elif cfg.family == "hybrid":
+            x, cache = self._decode_hybrid(params, cache, x, positions)
+
+        x = layers.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = self._unembed(params, x)
+        cache = {**cache, "pos": jnp.asarray(
+            T + (cfg.n_media_tokens if cfg.family == "audio" else 0),
+            jnp.int32)}
+        return logits, cache
+
+    # ---------------- decode ----------------
+
+    def init_cache(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        L, K, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            cache["k"] = jnp.zeros((L, batch_size, max_len, K, Dh), dtype)
+            cache["v"] = jnp.zeros((L, batch_size, max_len, K, Dh), dtype)
+        if cfg.family == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            cache["media_k"] = jnp.zeros(
+                (n_cross, batch_size, cfg.n_media_tokens, K, Dh), dtype)
+            cache["media_v"] = jnp.zeros_like(cache["media_k"])
+        if cfg.family in ("ssm", "hybrid"):
+            di, n = cfg.d_inner, cfg.ssm_state
+            cache["conv"] = jnp.zeros(
+                (L, batch_size, cfg.ssm_conv - 1, di), dtype)
+            if cfg.mamba_version == 1:
+                cache["h"] = jnp.zeros((L, batch_size, di, n), jnp.float32)
+            else:
+                H = di // cfg.ssm_head_dim
+                cache["h"] = jnp.zeros(
+                    (L, batch_size, H, cfg.ssm_head_dim, n), jnp.float32)
+        if cfg.family == "hybrid":
+            n_app = cfg.n_layers // cfg.attn_every
+            cache["k"] = jnp.zeros((n_app, batch_size, max_len, K, Dh), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        return cache
+
+    def decode_step(self, params: Params, cache: dict, tokens: jax.Array,
+                    media: jax.Array | None = None
+                    ) -> tuple[jax.Array, dict]:
+        """One serve step: tokens (B, 1) -> logits (B, 1, V), updated cache."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.family == "audio" or (cfg.family == "dense"
+                                     and cfg.tie_embeddings):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        flags = self._layer_is_global()
+
+        if cfg.family in ("dense", "moe", "audio"):
+            if "moe_blocks" in params:
+                x, cache = self._moe_grouped_pass(params, cache, x,
+                                                  positions, pos)
+            else:
+                def layer(x, inp):
+                    blk, is_global, kc, vc = inp
+                    x, (nk, nv) = self._decoder_layer(
+                        blk, x, positions, is_global, kv_cache=(kc, vc),
+                        cache_len=pos)
+                    return x, (nk, nv)
+
+                x, (nk, nv) = self._scan(
+                    layer, x,
+                    (params["blocks"], flags, cache["k"], cache["v"]))
+                cache = {**cache, "k": nk, "v": nv}
+        elif cfg.family == "vlm":
+            x, cache = self._decode_vlm(params, cache, x, positions, media)
+        elif cfg.family == "ssm":
+            def layer(x, inp):
+                blk, conv, h = inp
+                x, (nc, nh) = self._ssm_layer(blk, x, state=(conv, h))
+                return x, (nc, nh)
+
+            x, (nc, nh) = self._scan(
+                layer, x, (params["blocks"], cache["conv"], cache["h"]))
+            cache = {**cache, "conv": nc, "h": nh}
+        elif cfg.family == "hybrid":
+            x, cache = self._decode_hybrid(params, cache, x, positions)
+
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._unembed(params, x)
+        cache = {**cache, "pos": pos + 1}
+        return logits, cache
+
+    def _moe_grouped_pass(self, params, cache, x, positions, pos):
+        """Cached pass for moe_every>1 (llama4): cache rows are laid out as
+        [dense layers in scan order, then moe layers]."""
+        cfg = self.cfg
+        k = cfg.moe_every - 1
+        n_groups = cfg.n_layers // cfg.moe_every
+        n_dense = n_groups * k
+        dense = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["blocks"])
+        kd = cache["k"][:n_dense].reshape(n_groups, k, *cache["k"].shape[1:])
+        vd = cache["v"][:n_dense].reshape(n_groups, k, *cache["v"].shape[1:])
+        km, vm = cache["k"][n_dense:], cache["v"][n_dense:]
+
+        def group(x, inp):
+            dgrp, mblk, kc, vc, kmc, vmc = inp
+
+            def inner(x, st):
+                blk, kcc, vcc = st
+                x, (nk, nv) = self._decoder_layer(
+                    blk, x, positions, True, kv_cache=(kcc, vcc),
+                    cache_len=pos)
+                return x, (nk, nv)
+
+            x, (nkd, nvd) = self._scan(inner, x, (dgrp, kc, vc))
+            x, (nkm, nvm) = self._decoder_layer(
+                mblk, x, positions, True, kv_cache=(kmc, vmc), cache_len=pos)
+            return x, (nkd, nvd, nkm, nvm)
+
+        x, (nkd, nvd, nkm, nvm) = self._scan(
+            group, x, (dense, params["moe_blocks"], kd, vd, km, vm))
+        cache = {**cache,
+                 "k": jnp.concatenate(
+                     [nkd.reshape(n_dense, *nkd.shape[2:]), nkm]),
+                 "v": jnp.concatenate(
+                     [nvd.reshape(n_dense, *nvd.shape[2:]), nvm])}
+        return x, cache
+
+    def _decode_vlm(self, params, cache, x, positions, media):
+        cfg = self.cfg
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        pos = cache["pos"]
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["blocks"])
+        flags = self._layer_is_global().reshape(n_groups, k)
+        kr = cache["k"].reshape(n_groups, k, *cache["k"].shape[1:])
+        vr = cache["v"].reshape(n_groups, k, *cache["v"].shape[1:])
+
+        def group(x, inp):
+            grp, cross, fl, kc, vc, mk, mv = inp
+
+            def self_layer(x, inner):
+                blk, g, kcc, vcc = inner
+                x, (nk, nv) = self._decoder_layer(
+                    blk, x, positions, g, kv_cache=(kcc, vcc), cache_len=pos)
+                return x, (nk, nv)
+
+            x, (nk, nv) = self._scan(self_layer, x, (grp, fl, kc, vc))
+            h = layers.rms_norm(x, cross["ln"], cfg.norm_eps)
+            # cross-attn against the cached media K/V (computed at prefill)
+            spec = self._attn_spec()
+            q = jnp.einsum("btd,dhk->bthk", h, cross["attn"]["wq"])
+            out = layers.attention(q, mk, mv, spec,
+                                   q_offset=mk.shape[1], is_global=True)
+            a = jnp.einsum("bthk,hkd->btd", out, cross["attn"]["wo"])
+            x = x + jnp.tanh(cross["gate"]).astype(x.dtype) * a
+            return x, (nk, nv)
+
+        x, (nk, nv) = self._scan(
+            group, x, (blocks, params["cross_blocks"], flags, kr, vr,
+                       cache["media_k"], cache["media_v"]))
+        cache = {**cache,
+                 "k": nk.reshape(cfg.n_layers, *nk.shape[2:]),
+                 "v": nv.reshape(cfg.n_layers, *nv.shape[2:])}
+        return x, cache
+
+    def _decode_hybrid(self, params, cache, x, positions):
+        cfg = self.cfg
+        k = cfg.attn_every
+        n_groups = cfg.n_layers // k
+        pos = cache["pos"]
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["blocks"])
+        convr = cache["conv"].reshape(n_groups, k, *cache["conv"].shape[1:])
+        hr = cache["h"].reshape(n_groups, k, *cache["h"].shape[1:])
+
+        def group(x, inp):
+            grp, conv, h, kc, vc, g_idx = inp
+
+            def inner(x, st):
+                blk, c, hh = st
+                x, (nc, nh) = self._ssm_layer(blk, x, state=(c, hh))
+                return x, (nc, nh)
+
+            x, (nc, nh) = self._scan(inner, x, (grp, conv, h))
+            sa = _take(params["shared_attn"],
+                       g_idx % cfg.n_shared_attn_blocks)
+            hn = layers.rms_norm(x, sa["ln"], cfg.norm_eps)
+            a, (nk, nv) = layers.attn_block(
+                sa["attn"], hn, self._attn_spec(), rope_theta=cfg.rope_theta,
+                norm_eps=cfg.norm_eps, positions=positions,
+                kv_cache=(kc, vc), cache_len=pos)
+            x = x + a
+            hn = layers.rms_norm(x, sa["ln2"], cfg.norm_eps)
+            x = x + layers.mlp_block(sa["mlp"], hn, cfg.act,
+                                     overlap=cfg.overlap == "shared_bus")
+            return x, (nc, nh, nk, nv)
+
+        x, (nc, nh, nk, nv) = self._scan(
+            group, x, (blocks, convr, hr, cache["k"], cache["v"],
+                       jnp.arange(n_groups)))
+        cache = {**cache,
+                 "conv": nc.reshape(cfg.n_layers, *nc.shape[2:]),
+                 "h": nh.reshape(cfg.n_layers, *nh.shape[2:]),
+                 "k": nk, "v": nv}
+        return x, cache
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

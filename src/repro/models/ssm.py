@@ -1,0 +1,234 @@
+"""State-space (Mamba) blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+The selective scan runs as a chunked associative scan: within-chunk
+``jax.lax.associative_scan`` (parallel, depth log c) and a sequential
+``lax.scan`` carrying the state across chunks — O(T/c) sequential steps with
+O(B * c * d * n) peak memory, the TPU-friendly middle ground.
+
+Decode is the O(1) recurrent step on carried (conv_state, ssm_state) — the
+reason the `long_500k` cell is trivial for SSM families.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+CHUNK = 256
+
+
+def _assoc_combine(a, b):
+    # linear recurrence h' = A*h + Bx composes as (A2*A1, A2*b1 + b2)
+    return a[0] * b[0], b[0] * a[1] + b[1]
+
+
+def chunked_selective_scan(decay: jax.Array, inp: jax.Array,
+                           h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scan h_t = decay_t * h_{t-1} + inp_t over axis 1 (time).
+
+    decay/inp: (B, T, ...); h0: (B, ...).  Returns (all h, final h).
+    (Used for short sequences / tests; the model blocks use the fused
+    variant below which never materializes the (B, T, d, n) products.)
+    """
+    B, T = decay.shape[:2]
+    c = min(CHUNK, T)
+    nchunks = -(-T // c)
+    pad = nchunks * c - T
+    if pad:
+        decay = jnp.pad(decay, ((0, 0), (0, pad)) + ((0, 0),) *
+                        (decay.ndim - 2), constant_values=1.0)
+        inp = jnp.pad(inp, ((0, 0), (0, pad)) + ((0, 0),) * (inp.ndim - 2))
+    dc = decay.reshape(B, nchunks, c, *decay.shape[2:]).swapaxes(0, 1)
+    ic = inp.reshape(B, nchunks, c, *inp.shape[2:]).swapaxes(0, 1)
+
+    def chunk_step(h, xs):
+        d, i = xs                                  # (B, c, ...)
+        # prepend carry as a virtual step: h_t within chunk
+        a, b = jax.lax.associative_scan(_assoc_combine, (d, i), axis=1)
+        h_all = a * h[:, None] + b                 # (B, c, ...)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(chunk_step, h0, (dc, ic))
+    h_all = h_chunks.swapaxes(0, 1).reshape(B, nchunks * c, *h0.shape[1:])
+    return h_all[:, :T], h_last
+
+
+def fused_ssm_scan(make_chunk, emit_chunk, small_inputs: tuple,
+                   h0: jax.Array, T: int, chunk: int,
+                   unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Chunked selective scan with LAZY (decay, Bx) construction.
+
+    ``small_inputs`` are (B, T, ...) tensors WITHOUT the state dimension;
+    ``make_chunk(*chunk_inputs) -> (decay, inp)`` builds the (B, c, ..., n)
+    products for one chunk only, and ``emit_chunk(h_all, *chunk_inputs) ->
+    y`` contracts the state away again — so the O(T * d * n) intermediate
+    never exists, only O(chunk * d * n).  This is what lets zamba2
+    (d_inner 5120, n 64) train at 4k and prefill at 32k without terabytes
+    of scan temps (EXPERIMENTS.md §Perf).
+    """
+    B = small_inputs[0].shape[0]
+    c = min(chunk, T)
+    nchunks = -(-T // c)
+    pad = nchunks * c - T
+
+    def prep(x):
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        return x.reshape(B, nchunks, c, *x.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(prep(x) for x in small_inputs)
+
+    def chunk_step(h, chunk_inputs):
+        decay, inp = make_chunk(*chunk_inputs)     # (B, c, ..., n)
+        a, b = jax.lax.associative_scan(_assoc_combine, (decay, inp),
+                                        axis=1)
+        h_all = a * h[:, None] + b
+        y = emit_chunk(h_all, *chunk_inputs)       # state contracted away
+        return h_all[:, -1], y
+
+    # recompute the (B, c, d, n) products in the VJP instead of saving them
+    # per chunk (they dominate backward memory otherwise)
+    chunk_step = jax.checkpoint(chunk_step)
+    # unroll=True for dry-run cost probes (scan bodies are counted once)
+    h_last, y_chunks = jax.lax.scan(chunk_step, h0, xs,
+                                    unroll=True if unroll else 1)
+    y = y_chunks.swapaxes(0, 1).reshape(B, nchunks * c, *y_chunks.shape[3:])
+    return y[:, :T], h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B, T, D); w: (K, D); state: (B, K-1, D)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xin = jnp.concatenate([state, x], axis=1)
+    out = sum(xin[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b, xin[:, -(K - 1):]
+
+
+def init_mamba_params(key, cfg, dtype) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    dt_rank = max(1, d // 16)
+    p = {
+        "in_proj": dense_init(ks[0], d, (2 * di,), dtype),
+        "conv_w": dense_init(ks[1], cfg.ssm_conv, (di,), dtype
+                             ).reshape(cfg.ssm_conv, di),
+        "conv_b": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[5], di, (d,), dtype),
+    }
+    if cfg.mamba_version == 1:
+        p.update({
+            "x_proj": dense_init(ks[2], di, (dt_rank + 2 * n,), dtype),
+            "dt_proj": dense_init(ks[3], dt_rank, (di,), jnp.float32),
+            "dt_bias": jnp.zeros((di,), jnp.float32),
+            "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (di, 1))),            # (di, n)
+            "D": jnp.ones((di,), jnp.float32),
+        })
+    else:  # mamba2: scalar decay per head
+        H = di // cfg.ssm_head_dim
+        p.update({
+            "bc_proj": dense_init(ks[2], d, (2 * n,), dtype),
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+            "A_log": jnp.zeros((H,), jnp.float32),
+            "D": jnp.ones((H,), jnp.float32),
+            "dt_proj_h": dense_init(ks[3], d, (H,), jnp.float32),
+            "norm_w": jnp.zeros((di,), dtype),
+        })
+    return p
+
+
+def mamba1_block(p: Params, x: jax.Array, cfg, *,
+                 state: tuple[jax.Array, jax.Array] | None = None
+                 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Falcon-mamba style Mamba-1 mixer.  x: (B, T, d)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, cfg.d_model // 16)
+    conv_state, h0 = state if state is not None else (None, None)
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bti,ie->bte", xs, p["x_proj"])
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt_in.astype(jnp.float32), p["dt_proj"])
+        + p["dt_bias"])                                       # (B,T,di)
+    A = -jnp.exp(p["A_log"])                                  # (di, n)
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], di, n), jnp.float32)
+
+    def make_chunk(dt_c, x_c, b_c, _c_c):
+        decay = jnp.exp(dt_c[..., None] * A)                  # (B,c,di,n)
+        bx = (dt_c * x_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[..., None, :]
+        return decay, bx
+
+    def emit_chunk(h_all, _dt, _x, _b, c_c):
+        return jnp.einsum("bcin,bcn->bci", h_all,
+                          c_c.astype(jnp.float32))
+
+    y, h_last = fused_ssm_scan(make_chunk, emit_chunk,
+                               (dt, xs, Bc, Cc), h0, x.shape[1], CHUNK,
+                               unroll=cfg.unroll_layers)
+    y = y + p["D"] * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bti,id->btd", y, p["out_proj"]), (conv_state, h_last)
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg, *,
+                 state: tuple[jax.Array, jax.Array] | None = None
+                 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Zamba2-style Mamba-2 mixer (scalar per-head decay, SSD-like).
+
+    x: (B, T, d).  State layout: heads H = d_inner / ssm_head_dim, each head
+    carries (head_dim, n) state.
+    """
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // hd
+    conv_state, h0 = state if state is not None else (None, None)
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    bc = jnp.einsum("btd,de->bte", x, p["bc_proj"])
+    Bc, Cc = jnp.split(bc, 2, axis=-1)                        # (B,T,n) each
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["dt_proj_h"])
+        + p["dt_bias"])                                       # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+
+    xh = xs.reshape(*xs.shape[:2], H, hd)                     # (B,T,H,hd)
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], H, hd, n), jnp.float32)
+
+    def make_chunk(dt_c, xh_c, b_c, _c_c):
+        decay = jnp.exp(dt_c * A)[..., None, None]            # (B,c,H,1,1)
+        bx = (dt_c[..., None] * xh_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, None, :]    # (B,c,H,hd,n)
+        return jnp.broadcast_to(decay, bx.shape), bx
+
+    def emit_chunk(h_all, _dt, _xh, _b, c_c):
+        return jnp.einsum("bchdn,bcn->bchd", h_all,
+                          c_c.astype(jnp.float32))
+
+    # smaller chunks: the (c, H, hd, n) working set is 16x mamba-1's
+    y, h_last = fused_ssm_scan(make_chunk, emit_chunk,
+                               (dt, xh, Bc, Cc), h0, x.shape[1], CHUNK // 4,
+                               unroll=cfg.unroll_layers)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:2], di)
+    # gated RMSNorm (mamba2)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_w"],
+                 cfg.norm_eps).astype(x.dtype)
+    return jnp.einsum("bti,id->btd", y, p["out_proj"]), (conv_state, h_last)

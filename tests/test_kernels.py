@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+All kernels run in interpret mode on CPU (the TPU BlockSpecs are exercised
+structurally; numerics are identical by construction of interpret mode).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.lut_matmul import GROUP, quantize_weights
+
+
+class TestLutMatmul:
+    @pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+        (128, 128, 128, 128, 128, 128),
+        (256, 256, 128, 128, 128, 128),
+        (128, 512, 256, 128, 128, 256),
+        (384, 128, 128, 128, 128, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shape_dtype_sweep(self, M, K, N, bm, bn, bk, dtype):
+        rng = np.random.default_rng(M + K + N)
+        x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+        w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+        codes, lut = quantize_weights(w)
+        got = ops.lut_matmul(x, codes, lut, bm=bm, bn=bn, bk=bk)
+        want = ref.lut_matmul_ref(x, codes, lut)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol * 10)
+
+    def test_quantizer_reconstruction_error_bounded(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+        codes, lut = quantize_weights(w)
+        g = w.reshape(-1, GROUP, 128)
+        scale = (g.max(1) - g.min(1)) / 15.0
+        wq = ref.lut_matmul_ref(jnp.eye(256, dtype=jnp.float32), codes, lut)
+        err = np.abs(np.asarray(wq - w))
+        # error bounded by half a quantization step per (group, column)
+        bound = np.repeat(np.asarray(scale), GROUP, axis=0) * 0.5 + 1e-6
+        assert (err <= bound).all()
+
+    @hypothesis.given(st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def test_random_codebooks(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        codes = jnp.asarray(rng.integers(0, 16, (128, 128)), jnp.uint8)
+        lut = jnp.asarray(rng.normal(size=(128 // GROUP, 128, 16)),
+                          jnp.float32)
+        got = ops.lut_matmul(x, codes, lut)
+        want = ref.lut_matmul_ref(x, codes, lut)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("Tq,Tk,D,window,softcap,causal", [
+        (128, 128, 64, 0, 0.0, True),
+        (256, 256, 64, 0, 0.0, True),
+        (128, 128, 128, 64, 0.0, True),       # sliding window
+        (128, 128, 64, 0, 50.0, True),        # gemma softcap
+        (128, 256, 64, 0, 0.0, False),        # non-causal (cross-attn)
+        (256, 128, 32, 100, 30.0, True),      # window + cap combined
+    ])
+    def test_vs_oracle(self, Tq, Tk, D, window, softcap, causal):
+        rng = np.random.default_rng(Tq + Tk + D + window)
+        q = jnp.asarray(rng.normal(size=(2, Tq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, Tk, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, Tk, D)), jnp.float32)
+        got = ops.gqa_flash_attention(
+            q.reshape(2, Tq, 1, D), k.reshape(2, Tk, 1, D),
+            v.reshape(2, Tk, 1, D), causal=causal, window=window,
+            softcap=softcap)
+        want = ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(got[:, :, 0]),
+                                   np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_gqa_grouping(self):
+        """GQA fold: 4 query heads sharing 2 kv heads == per-head oracle."""
+        rng = np.random.default_rng(7)
+        B, T, H, K, D = 2, 128, 4, 2, 32
+        q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, T, K, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, T, K, D)), jnp.float32)
+        got = ops.gqa_flash_attention(q, k, v)
+        G = H // K
+        for h in range(H):
+            kv = h // G
+            want = ref.flash_attention_ref(
+                q[:, :, h], k[:, :, kv], v[:, :, kv])
+            np.testing.assert_allclose(np.asarray(got[:, :, h]),
+                                       np.asarray(want), rtol=2e-5,
+                                       atol=2e-5)
+
+    def test_matches_model_attention(self):
+        """Kernel == the model's chunked-attention implementation."""
+        from repro.models.layers import AttnSpec, attention
+        rng = np.random.default_rng(3)
+        B, T, K, G, D = 1, 256, 2, 2, 32
+        H = K * G
+        q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, T, K, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, T, K, D)), jnp.float32)
+        spec = AttnSpec(H, K, D, window=64)
+        model_out = attention(q, k, v, spec, q_offset=0, is_global=False)
+        kern_out = ops.gqa_flash_attention(q, k, v, window=64)
+        np.testing.assert_allclose(np.asarray(kern_out),
+                                   np.asarray(model_out), rtol=2e-4,
+                                   atol=2e-4)
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("B,T,D,N,bt", [
+        (1, 64, 32, 8, 32),
+        (2, 128, 64, 16, 64),
+        (2, 128, 16, 4, 128),
+        (3, 192, 8, 16, 64),
+    ])
+    def test_vs_oracle(self, B, T, D, N, bt):
+        rng = np.random.default_rng(B * T + D)
+        decay = jnp.asarray(rng.uniform(0.5, 1.0, (B, T, D, N)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(B, T, D, N)) * 0.1, jnp.float32)
+        c = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+        got = ops.mamba_scan(decay, u, c, bt=bt)
+        want = ref.mamba_scan_ref(decay, u, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_carries_across_blocks(self):
+        """A unit impulse at t=0 with decay 1 must persist to the last
+        block — catches broken scratch carry between grid steps."""
+        B, T, D, N = 1, 128, 4, 2
+        decay = jnp.ones((B, T, D, N), jnp.float32)
+        u = jnp.zeros((B, T, D, N), jnp.float32).at[:, 0].set(1.0)
+        c = jnp.ones((B, T, N), jnp.float32)
+        y = ops.mamba_scan(decay, u, c, bt=32)
+        np.testing.assert_allclose(np.asarray(y[0, -1]), np.full(D, N),
+                                   rtol=1e-6)
+
+    @hypothesis.given(st.integers(0, 10_000))
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def test_property_random(self, seed):
+        rng = np.random.default_rng(seed)
+        B, T, D, N = 1, 64, 8, 4
+        decay = jnp.asarray(rng.uniform(0.0, 1.0, (B, T, D, N)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(B, T, D, N)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+        got = ops.mamba_scan(decay, u, c, bt=16)
+        want = ref.mamba_scan_ref(decay, u, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,94 @@
+"""MoE dispatch invariants: sort-based capacity dispatch vs dense oracle."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import layers, moe
+
+
+def _cfg(E=8, k=2, d=16, f=32, shared=0):
+    base = registry.get("qwen2-moe-a2.7b").reduced()
+    return dataclasses.replace(base, n_experts=E, n_experts_active=k,
+                               moe_d_ff=f, d_model=d,
+                               shared_expert_d_ff=shared)
+
+
+def _dense_oracle(params, x, cfg):
+    """Route with the same top-k, but compute EVERY expert densely."""
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"])
+    w, experts = jax.lax.top_k(jax.nn.softmax(logits, -1),
+                               cfg.n_experts_active)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    g = layers._act(jnp.einsum("nd,edf->enf", xf, params["wi_gate"]),
+                    cfg.act)
+    u = jnp.einsum("nd,edf->enf", xf, params["wi_up"])
+    all_out = jnp.einsum("enf,efd->end", g * u, params["wo"])  # (E, N, d)
+    out = jnp.zeros((N, d), x.dtype)
+    for j in range(cfg.n_experts_active):
+        sel = jnp.take_along_axis(
+            all_out.transpose(1, 0, 2), experts[:, j][:, None, None],
+            axis=1)[:, 0]
+        out = out + sel * w[:, j][:, None].astype(x.dtype)
+    return out.reshape(B, T, d)
+
+
+class TestMoE:
+    def test_matches_dense_oracle_no_drops(self):
+        cfg = _cfg()
+        params = moe.init_moe_params(jax.random.key(0), cfg.d_model, cfg,
+                                     jnp.float32)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(2, 12, cfg.d_model)), jnp.float32)
+        got = moe.moe_block(params, x, cfg, capacity_factor=100.0)
+        want = _dense_oracle(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_capacity_drops_reduce_norm_not_nan(self):
+        cfg = _cfg(E=4, k=2)
+        params = moe.init_moe_params(jax.random.key(1), cfg.d_model, cfg,
+                                     jnp.float32)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+        full = moe.moe_block(params, x, cfg, capacity_factor=100.0)
+        tight = moe.moe_block(params, x, cfg, capacity_factor=0.25)
+        assert bool(jnp.isfinite(tight).all())
+        assert float(jnp.linalg.norm(tight)) <= \
+            float(jnp.linalg.norm(full)) + 1e-3
+
+    def test_shared_expert_added(self):
+        cfg = _cfg(shared=64)
+        params = moe.init_moe_params(jax.random.key(2), cfg.d_model, cfg,
+                                     jnp.float32)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+        with_shared = moe.moe_block(params, x, cfg, capacity_factor=100.0)
+        shared_only = layers.mlp_block(params["shared"], x, cfg.act)
+        routed = _dense_oracle(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(with_shared),
+                                   np.asarray(routed + shared_only),
+                                   rtol=2e-4, atol=2e-5)
+
+    @hypothesis.given(st.integers(0, 10_000))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_property_random_routing(self, seed):
+        cfg = _cfg(E=6, k=3, d=8, f=16)
+        params = moe.init_moe_params(jax.random.key(seed % 97), cfg.d_model,
+                                     cfg, jnp.float32)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(1, 10, cfg.d_model)), jnp.float32)
+        got = moe.moe_block(params, x, cfg, capacity_factor=100.0)
+        want = _dense_oracle(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-5)

@@ -1,0 +1,51 @@
+"""Fig 7 reproduction: N-bit pLUTo op latencies under LISA vs Shared-PIM."""
+
+import pytest
+
+from repro.core import pluto
+from repro.core.pluto import Interconnect
+
+
+class TestFig7:
+    def test_32bit_add_improvement(self):
+        """Paper Sec IV-D: 18% speedup for 32-bit addition."""
+        assert pluto.improvement(32, "add") == pytest.approx(0.18, abs=0.01)
+
+    def test_32bit_mul_improvement(self):
+        """Paper Sec IV-D: 31% speedup for 32-bit multiplication."""
+        assert pluto.improvement(32, "mul") == pytest.approx(0.31, abs=0.01)
+
+    def test_128bit_improvements(self):
+        """Paper Sec IV-D: 40% for both ops at 128 bits (the 1.4x claim)."""
+        assert pluto.improvement(128, "add") == pytest.approx(0.40, abs=0.01)
+        assert pluto.improvement(128, "mul") == pytest.approx(0.40, abs=0.01)
+        assert pluto.mul_latency_ns(128, Interconnect.LISA) / \
+            pluto.mul_latency_ns(128, Interconnect.SHARED_PIM) == \
+            pytest.approx(1.4, abs=0.35)
+
+    def test_improvement_monotone_in_bits(self):
+        """Fig 7: the gap widens with operand width for both ops."""
+        for op in ("add", "mul"):
+            imps = [pluto.improvement(b, op) for b in (16, 32, 64, 128)]
+            assert imps == sorted(imps)
+
+    def test_sharedpim_never_slower(self):
+        for op in ("add", "mul"):
+            for bits in (4, 8, 16, 32, 64, 128):
+                assert pluto.improvement(bits, op) >= 0
+
+    def test_4bit_ops_identical(self):
+        """Single-subarray ops involve no transfers: both modes equal."""
+        assert pluto.add_latency_ns(4, Interconnect.LISA) == \
+            pluto.add_latency_ns(4, Interconnect.SHARED_PIM)
+
+    def test_invalid_widths_rejected(self):
+        with pytest.raises(ValueError):
+            pluto.add_latency_ns(10, Interconnect.LISA)
+        with pytest.raises(ValueError):
+            pluto.nibbles(0)
+
+    def test_transfer_constants_from_command_models(self):
+        """Move latencies are NOT fitted — they come from Table II models."""
+        assert pluto.T_MOVE_LISA == pytest.approx(260.5)
+        assert pluto.T_MOVE_BUS == pytest.approx(52.75)
