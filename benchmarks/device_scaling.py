@@ -1,0 +1,198 @@
+"""Device-scale scaling study: banks-per-device sweep, both interconnects.
+
+Runs every Fig-8 app (mm / pmm / ntt / bfs / dfs) through the hierarchical
+device scheduler across a sweep of bank counts, under both weak scaling (one
+bank-sized problem instance per bank + cross-bank reduction) and strong
+scaling (one fixed-size problem partitioned across all banks), and writes
+``BENCH_device.json``:
+
+* per-point makespans for LISA and Shared-PIM, the relative improvement,
+  the absolute advantage (LISA - SP, ns), cross-bank row traffic, stall and
+  bus-occupancy breakdowns;
+* a placement-policy comparison (round_robin / locality_first /
+  bandwidth_balanced) at the largest swept bank count;
+* a check that Shared-PIM's advantage (LISA - SP makespan) is
+  non-decreasing as cross-bank traffic grows — the device-scale version of
+  the paper's claim.  The check runs on the two curves where cross-bank
+  traffic is the *only* thing growing: the weak-scaling bank sweep (work
+  per bank fixed) and the placement-policy sweep at a fixed geometry.  The
+  strong-scaling sweep is recorded but not asserted on: growing the device
+  adds parallel compute alongside the traffic, so both interconnects'
+  makespans legitimately compress at different rates.  The process exits
+  non-zero if the check fails, so CI catches model regressions.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/device_scaling.py            # full sweep
+    PYTHONPATH=src python benchmarks/device_scaling.py --smoke    # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import taskgraph
+from repro.core.pluto import Interconnect
+from repro.device import (POLICIES, DeviceGeometry, build_partitioned,
+                          improvement, schedule)
+
+#: paper-sized problems (Fig 8) and the CI-sized smoke variants
+APP_KW = {
+    "mm": dict(n=200), "pmm": dict(n=300), "ntt": dict(n=512),
+    "bfs": dict(n_nodes=1000), "dfs": dict(n_nodes=1000),
+}
+APP_KW_SMOKE = {
+    "mm": dict(n=40), "pmm": dict(n=40), "ntt": dict(n=64),
+    "bfs": dict(n_nodes=120), "dfs": dict(n_nodes=120),
+}
+
+
+def _geometry(banks: int, channels: int) -> DeviceGeometry:
+    """Flat per-channel hierarchy: all banks of a channel share one bus."""
+    return DeviceGeometry(channels=channels, banks_per_channel=banks,
+                          bank_groups_per_channel=1)
+
+
+def run_point(app: str, kw: dict, geom: DeviceGeometry, scaling: str,
+              policy: str) -> dict:
+    res = {}
+    for mode in Interconnect:
+        tasks = build_partitioned(app, mode, geom, policy=policy,
+                                  scaling=scaling, **kw)
+        res[mode.value] = schedule(tasks, mode, geom)
+    lisa, sp = res["lisa"], res["shared_pim"]
+    return {
+        "app": app,
+        "scaling": scaling,
+        "policy": policy,
+        "banks": geom.n_banks,
+        "channels": geom.channels,
+        "lisa_makespan_ns": lisa.makespan_ns,
+        "shared_pim_makespan_ns": sp.makespan_ns,
+        "improvement": improvement(res),
+        "advantage_ns": lisa.makespan_ns - sp.makespan_ns,
+        "cross_rows": lisa.cross_rows,
+        "lisa_stall_ns": lisa.stall_ns,
+        "sp_stall_ns": sp.stall_ns,
+        "sp_bus_busy_ns": sp.bus_busy_ns,
+        "lisa_transfer_energy_j": lisa.transfer_energy_j,
+        "sp_transfer_energy_j": sp.transfer_energy_j,
+    }
+
+
+def check_monotone(points: list[dict], axis: str) -> list[str]:
+    """Advantage must be non-decreasing in cross-bank traffic per curve.
+
+    ``axis`` labels what varies along each per-app curve ("banks" for the
+    weak-scaling sweep, "policy" for the placement sweep).
+    """
+    violations = []
+    curves: dict[tuple[str, str], list[dict]] = {}
+    for p in points:
+        curves.setdefault((p["app"], axis), []).append(p)
+    for (app, scaling), pts in curves.items():
+        # any point with strictly more cross-bank traffic must have at least
+        # as much advantage; equal-traffic points are not ordered by the claim
+        levels: dict[int, list[float]] = {}
+        for p in pts:
+            levels.setdefault(p["cross_rows"], []).append(p["advantage_ns"])
+        prev_max = float("-inf")
+        for rows in sorted(levels):
+            advs = levels[rows]
+            if min(advs) < prev_max - 1e-6:
+                violations.append(
+                    f"{app}/{scaling}: advantage fell {prev_max:.0f} -> "
+                    f"{min(advs):.0f} ns at cross rows {rows}")
+            prev_max = max(prev_max, *advs)
+    return violations
+
+
+def _bank_list(s: str) -> list[int]:
+    return [int(x) for x in s.split(",")]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized problems and a short bank sweep")
+    ap.add_argument("--banks", type=_bank_list, default=None,
+                    help="comma-separated bank counts, e.g. 1,2,4,8")
+    ap.add_argument("--channels", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_device.json")
+    args = ap.parse_args(argv)
+
+    app_kw = APP_KW_SMOKE if args.smoke else APP_KW
+    banks = args.banks or ([1, 2, 4] if args.smoke else [1, 2, 4, 8])
+
+    # Strong scaling must hold total work fixed across the sweep.  The
+    # mm/pmm output slice and the ntt group count default to device-
+    # saturating values that grow with n_pes — pin each to the size that
+    # saturates the LARGEST swept device, so small devices queue the same
+    # work.  (bfs/dfs traverse a fixed node count already.)
+    biggest = _geometry(max(banks), args.channels)
+    slice_out = taskgraph.default_out_slice(biggest.total_pes)
+    strong_kw = {"mm": {"out_rows": slice_out},
+                 "pmm": {"out_coeffs": slice_out},
+                 "ntt": {"groups": biggest.total_pes}}
+
+    t0 = time.perf_counter()
+    sweep: list[dict] = []
+    for app, kw in app_kw.items():
+        for scaling in ("weak", "strong"):
+            kw_s = {**kw, **strong_kw.get(app, {})} if scaling == "strong" \
+                else kw
+            for nb in banks:
+                geom = _geometry(nb, args.channels)
+                p = run_point(app, kw_s, geom, scaling, "locality_first")
+                sweep.append(p)
+                print(f"{app:4s} {scaling:6s} banks={nb:2d} "
+                      f"imp={p['improvement']:6.3f} "
+                      f"adv={p['advantage_ns'] / 1e3:10.1f} us "
+                      f"cross_rows={p['cross_rows']}")
+
+    # placement-policy shoot-out at the largest device
+    policies = []
+    big = _geometry(max(banks), args.channels)
+    if big.n_banks > 1:
+        for app, kw in app_kw.items():
+            kw_s = {**kw, **strong_kw.get(app, {})}
+            for policy in POLICIES:
+                p = run_point(app, kw_s, big, "strong", policy)
+                policies.append(p)
+                print(f"policy {policy:20s} {app:4s} "
+                      f"imp={p['improvement']:6.3f} "
+                      f"cross_rows={p['cross_rows']}")
+
+    violations = check_monotone(
+        [p for p in sweep if p["scaling"] == "weak"], "banks")
+    violations += check_monotone(policies, "policy")
+    out = {
+        "config": {
+            "smoke": args.smoke,
+            "banks": banks,
+            "channels": args.channels,
+            "apps": {a: kw for a, kw in app_kw.items()},
+            "wall_s": time.perf_counter() - t0,
+        },
+        "sweep": sweep,
+        "policies": policies,
+        "monotone_ok": not violations,
+        "monotone_violations": violations,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} ({len(sweep)} sweep points, "
+          f"{len(policies)} policy points, {out['config']['wall_s']:.1f}s)")
+    if violations:
+        print("MONOTONICITY VIOLATIONS:", *violations, sep="\n  ",
+              file=sys.stderr)
+        return 1
+    print("shared-pim advantage non-decreasing with cross-bank traffic: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -49,6 +49,24 @@ def lut_alu_demo():
     print("  (bit-identical to uint32 arithmetic, computed via 4-bit LUTs)")
 
 
+def device_demo():
+    print("\n== Device scale: mm across a 2-channel x 4-bank device ==")
+    from repro import device
+    geom = device.DeviceGeometry(channels=2, banks_per_channel=4,
+                                 bank_groups_per_channel=2)
+    print(f"  geometry: {geom.describe()}")
+    for policy in device.POLICIES:
+        res = {}
+        for m in Interconnect:
+            tasks = device.build_partitioned("mm", m, geom, policy=policy,
+                                             n=100)
+            res[m.value] = device.schedule(tasks, m, geom)
+        sp = res["shared_pim"]
+        print(f"  {policy:20s} improvement {device.improvement(res)*100:5.1f}%"
+              f"  cross-bank rows {sp.cross_rows:6d}"
+              f"  (LISA stalled {res['lisa'].stall_ns/1e3:.0f} us of PE time)")
+
+
 def train_demo():
     print("\n== Train a reduced granite-3-2b for 10 steps ==")
     from repro.launch.train import main as train_main
@@ -61,4 +79,5 @@ if __name__ == "__main__":
     copy_latency_demo()
     scheduler_demo()
     lut_alu_demo()
+    device_demo()
     train_demo()

@@ -1,0 +1,57 @@
+"""Version compatibility shims for jax APIs used across the repo.
+
+The codebase targets the modern ``jax.shard_map`` / ``jax.lax.pvary`` API
+(jax >= 0.5); older runtimes only ship ``jax.experimental.shard_map`` and
+have no varying-manual-axes (vma) typing at all.  Importing from here keeps
+every call site identical regardless of the installed jax.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+try:  # jax >= 0.5
+    _shard_map_impl = jax.shard_map
+    _NEW_API = True
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _NEW_API = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, auto=None, check_vma=None):
+    """``jax.shard_map`` with the new keyword surface on any jax version.
+
+    ``check_vma`` maps onto the legacy ``check_rep`` flag (same meaning:
+    verify replication/varying typing of outputs) when running on 0.4.x.
+    """
+    kw = {}
+    if auto is not None:
+        kw["auto"] = auto
+    if _NEW_API:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+    else:
+        # 0.4.x's replication checker has false positives on scan carries
+        # (jax suggests check_rep=False as the workaround), and has no vma
+        # typing to protect anyway — disable unless explicitly requested.
+        kw["check_rep"] = False if check_vma is None else check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name):
+    """``lax.axis_size`` on any jax; falls back to the ``psum(1, axis)`` idiom
+    (statically folded to a Python int under manual axes on 0.4.x)."""
+    fn = getattr(lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def pvary(x, axis_names):
+    """``lax.pvary`` where it exists; identity on runtimes without vma typing."""
+    fn = getattr(lax, "pvary", None)
+    if fn is None:
+        return x
+    return fn(x, axis_names)

@@ -191,8 +191,6 @@ def sharedpim_copy(t: T.DramTiming = T.DDR3_1600, *, src: int = 0, dst: int = 1,
         cmds[1] = dataclasses.replace(cmds[1], start_ns=stage.latency_ns)
         lat += stage.latency_ns
         stalled.append(src)
-    if not restore and not staged:
-        pass
     if not restore:
         rest = rc_intrasa_copy(t, subarray=dst)
         cmds.append(Command("restore: RC-IntraSA(shared row -> dst row)",

@@ -230,6 +230,13 @@ def compare(tasks: Iterable[Task], n_pes: int = 16
 
 
 def improvement(results: dict[str, ScheduleResult]) -> float:
+    """Fractional makespan improvement of Shared-PIM over LISA.
+
+    An empty task graph has zero makespan under both interconnects; report
+    zero improvement rather than dividing by zero.
+    """
     lisa = results["lisa"].makespan_ns
     sp = results["shared_pim"].makespan_ns
+    if lisa == 0.0:
+        return 0.0
     return 1.0 - sp / lisa

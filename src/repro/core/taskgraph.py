@@ -49,6 +49,17 @@ SLICES_NTT_XCHG = SLICES_32 // 2
 #: BFS visit fetch: 4 rows adjacency segment + 2 rows distance vector + 1 row
 #: frontier bitmap
 BFS_FETCH_ROWS = 7
+#: subarrays per Fig-4(b) pipeline group: two producers around one aggregator
+GROUP_PES = 3
+
+
+def default_out_slice(n_pes: int) -> int:
+    """Output rows/coeffs that saturate ``n_pes`` subarrays (2 per group).
+
+    This is the slice mm/pmm simulate by default; device-scale strong-scaling
+    sweeps pin it to the largest swept device so total work stays fixed.
+    """
+    return 2 * max(1, n_pes // GROUP_PES)
 
 
 def _op32(op: str, mode: Interconnect) -> float:
@@ -95,8 +106,9 @@ def matmul(n: int = 200, n_pes: int = 16,
     """
     b = _Builder(n_pes)
     t_mul, t_add = _op32("mul", mode), _op32("add", mode)
-    n_groups = max(1, n_pes // 3)
-    rows = min(n, out_rows if out_rows is not None else 2 * n_groups)
+    n_groups = max(1, n_pes // GROUP_PES)
+    rows = min(n, out_rows if out_rows is not None
+               else default_out_slice(n_pes))
     for r in range(rows):
         g = r % n_groups
         prod_a, agg, prod_b = 3 * g, 3 * g + 1, 3 * g + 2
@@ -119,8 +131,9 @@ def pmm(n: int = 300, n_pes: int = 16,
     """
     b = _Builder(n_pes)
     t_mul, t_add = _op32("mul", mode), _op32("add", mode)
-    n_groups = max(1, n_pes // 3)
-    n_out = min(2 * n - 1, out_coeffs if out_coeffs is not None else 2 * n_groups)
+    n_groups = max(1, n_pes // GROUP_PES)
+    n_out = min(2 * n - 1, out_coeffs if out_coeffs is not None
+                else default_out_slice(n_pes))
     ks = range(n - 1 - n_out // 2, n - 1 + (n_out + 1) // 2)
     for j, k in enumerate(ks):
         home = 3 * (j % n_groups)
@@ -137,17 +150,22 @@ def pmm(n: int = 300, n_pes: int = 16,
 
 
 def ntt(n: int = 512, n_pes: int = 16,
-        mode: Interconnect = Interconnect.LISA) -> list[Task]:
+        mode: Interconnect = Interconnect.LISA,
+        groups: int | None = None) -> list[Task]:
     """Iterative radix-2 constant-geometry NTT over n points.
 
-    Points are row-vectorized across lanes; we model ``n_pes`` row-groups
-    (the bank-saturating configuration).  Each stage: twiddle mul + butterfly
-    add/sub, then both 32-bit outputs exchange with the adjacent partner
-    (constant-geometry keeps partners at stride 1 every stage).
+    Points are row-vectorized across lanes; by default we model ``n_pes``
+    row-groups (the bank-saturating configuration), so the simulated work
+    grows with the device.  Strong-scaling sweeps pass an explicit
+    ``groups`` (pinned to the largest device) to hold total work fixed —
+    extra groups beyond ``n_pes`` wrap onto the PEs and serialize.  Each
+    stage: twiddle mul + butterfly add/sub, then both 32-bit outputs
+    exchange with the adjacent partner (constant-geometry keeps partners at
+    stride 1 every stage).
     """
     b = _Builder(n_pes)
     t_mul, t_add = _op32("mul", mode), _op32("add", mode)
-    groups = n_pes
+    groups = n_pes if groups is None else groups
     stages = int(math.log2(n))
     prev: dict[int, tuple[int, ...]] = {g: () for g in range(groups)}
     for s in range(stages):
@@ -167,21 +185,36 @@ def ntt(n: int = 512, n_pes: int = 16,
 
 
 def bfs(n_nodes: int = 1000, n_pes: int = 16,
-        mode: Interconnect = Interconnect.LISA) -> list[Task]:
+        mode: Interconnect = Interconnect.LISA,
+        n_stripes: int = 1) -> list[Task]:
     """Worst-case BFS on a dense graph: every node links to every other.
 
     Storage subarray 0 holds the adjacency matrix; visits alternate between
     two processing subarrays so the next fetch can be prefetched (the visit
     order of the dense worst case is known) while the current update runs.
     The frontier/state dependency still serializes the updates themselves.
+
+    ``n_stripes > 1`` makes the builder bank-aware for device-scale runs:
+    the adjacency matrix is too large for one bank, so node ``v``'s segment
+    is striped across ``n_stripes`` equal PE blocks (one per bank when the
+    device partitioner passes ``n_stripes=n_banks``) while the traversal
+    engine — frontier, distance vector, visit PEs — stays in block 0.  The
+    serial visit chain is unchanged, but ``(n_stripes - 1)/n_stripes`` of
+    the fetches become inter-block prefetch traffic.
     """
+    if n_pes % n_stripes:
+        raise ValueError(f"n_pes ({n_pes}) must be divisible by n_stripes "
+                         f"({n_stripes})")
+    stripe_w = n_pes // n_stripes
+    if stripe_w < 3:
+        raise ValueError("each stripe needs >= 3 PEs (storage + 2 visit PEs)")
     b = _Builder(n_pes)
     t_upd = _op32("add", mode)   # compare/update modeled as a 32-bit op pass
-    store = 0
     prev_upd: int | None = None
     prev_mv: int | None = None
     for v in range(n_nodes):
-        proc = 1 + (v % 2)       # double-buffered visit PEs
+        store = (v % n_stripes) * stripe_w   # stripe holding node v's segment
+        proc = 1 + (v % 2)                   # double-buffered visit PEs
         mv = b.move(store, proc, deps=_dep(prev_mv), rows=BFS_FETCH_ROWS,
                     tag=f"bfs.fetch v{v}")
         upd = b.op(proc, t_upd, deps=_dep(mv, prev_upd), tag="bfs.update")
@@ -190,9 +223,10 @@ def bfs(n_nodes: int = 1000, n_pes: int = 16,
 
 
 def dfs(n_nodes: int = 1000, n_pes: int = 16,
-        mode: Interconnect = Interconnect.LISA) -> list[Task]:
+        mode: Interconnect = Interconnect.LISA,
+        n_stripes: int = 1) -> list[Task]:
     """Worst-case DFS == worst-case BFS on the same dense graph (Sec IV-D)."""
-    return bfs(n_nodes, n_pes, mode)
+    return bfs(n_nodes, n_pes, mode, n_stripes=n_stripes)
 
 
 APPS = {"mm": matmul, "pmm": pmm, "ntt": ntt, "bfs": bfs, "dfs": dfs}

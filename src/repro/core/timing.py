@@ -54,6 +54,35 @@ class DramTiming:
     def bursts_per_row(self) -> int:
         return self.row_bytes // self.burst_bytes
 
+    # --- device-level transit legs (multi-bank hierarchy) ----------------------
+    #
+    # Moving a row OFF its bank streams it through progressively wider shared
+    # buses.  Each leg below is one store-and-forward hop of the hierarchy;
+    # :mod:`repro.device.interconnect` composes them into full route costs.
+
+    @property
+    def grb_stream_ns(self) -> float:
+        """One row through a bank-group global bus (read-out, burst cadence).
+
+        Same command structure as one RowClone-PSM leg: ACT -> CAS -> stream
+        ``bursts_per_row`` bursts -> precharge.  The bank-group bus is the
+        narrow shared resource every inter-bank move inside a group crosses.
+        """
+        return self.tRCD + self.CL + self.bursts_per_row * self.tCCD + self.tRP
+
+    @property
+    def channel_stream_ns(self) -> float:
+        """One row across a channel's global I/O (read leg + write leg).
+
+        The cross-bank-group / cross-channel hop: the row leaves its group
+        over the channel bus and is written into the destination group, i.e.
+        the memcpy command structure without the off-chip flight calibration.
+        """
+        read = self.tRCD + self.CL + self.bursts_per_row * self.tCCD
+        write = self.tRCD + self.CWL + self.bursts_per_row * self.tCCD \
+            + self.tWR + self.tRP
+        return read + write
+
 
 # --- Technology nodes (Table I) -------------------------------------------------
 

@@ -1,0 +1,31 @@
+"""Device-scale Shared-PIM simulation: multi-bank / multi-channel DRAM.
+
+The single-bank model (:mod:`repro.core`) answers the paper's question —
+what does concurrent computation and data flow buy inside one bank.  This
+package scales the question to a whole device:
+
+``geometry``      subarray -> bank -> bank group -> channel hierarchy
+``interconnect``  inter-bank / cross-channel transfer cost models
+``scheduler``     hierarchical list scheduler with shared-bus contention
+``partition``     placement policies that split apps across N banks
+
+Quickstart::
+
+    from repro.core.pluto import Interconnect
+    from repro import device
+
+    geom = device.DeviceGeometry(channels=2, banks_per_channel=4,
+                                 bank_groups_per_channel=2)
+    tasks = device.build_partitioned("mm", Interconnect.LISA, geom,
+                                     policy="locality_first", n=200)
+    res = device.compare(tasks, geom)
+    print(device.improvement(res), res["shared_pim"].rows_by_route)
+"""
+
+from repro.device.geometry import SINGLE_BANK, DeviceGeometry  # noqa: F401
+from repro.device.interconnect import (CrossBankPlan, plan,  # noqa: F401
+                                       transit_ns_per_row)
+from repro.device.partition import (POLICIES, build_partitioned,  # noqa: F401
+                                    cross_traffic_rows, pe_map, place)
+from repro.device.scheduler import (DeviceScheduleResult,  # noqa: F401
+                                    compare, improvement, schedule)

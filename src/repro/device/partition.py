@@ -1,0 +1,187 @@
+"""Workload partitioning: splitting task graphs across the device's banks.
+
+The taskgraph builders (:mod:`repro.core.taskgraph`) emit graphs over a flat
+*virtual* PE space of any size.  This module decides which physical bank each
+virtual PE lands on — the placement determines how much traffic crosses bank
+boundaries, which is exactly the axis along which Shared-PIM and LISA
+diverge at device scale.
+
+Placement policies (``place``):
+
+* ``round_robin``      — virtual PE ``v`` -> bank ``v % n_banks``.  Maximal
+  scatter: nearly every producer/consumer pair straddles banks.  The
+  stress-test upper bound for cross-bank traffic.
+* ``locality_first``   — contiguous blocks: virtual PE ``v`` -> bank
+  ``v // pes_per_bank`` (identity on global ids).  What a locality-aware
+  compiler would emit; only block-boundary neighbors communicate across
+  banks.
+* ``bandwidth_balanced`` — locality blocks, but blocks are ranked by their
+  cross-block traffic (row-weighted) and the heaviest blocks are spread
+  round-robin across channels, then bank groups, so no single bank-group bus
+  or channel carries a disproportionate share of the transit load.
+
+``build_partitioned`` is the one-call entry point: it builds an app over the
+right virtual PE count for the geometry (``strong`` scaling: one
+fixed-size problem over all banks; ``weak``: one bank-sized replica per bank
+plus a cross-bank reduction onto bank 0) and applies a policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from repro.core import pluto, taskgraph
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task, _dsts
+from repro.device.geometry import DeviceGeometry
+
+POLICIES = ("round_robin", "locality_first", "bandwidth_balanced")
+
+
+def _remap(tasks: Iterable[Task], pe_map: Sequence[int]) -> list[Task]:
+    out = []
+    for t in tasks:
+        out.append(dataclasses.replace(
+            t,
+            pe=None if t.pe is None else pe_map[t.pe],
+            src=None if t.src is None else pe_map[t.src],
+            dst=None if t.dst is None else (
+                tuple(pe_map[d] for d in t.dst) if isinstance(t.dst, tuple)
+                else pe_map[t.dst])))
+    return out
+
+
+def _block_weights(tasks: Iterable[Task], geom: DeviceGeometry) -> list[float]:
+    """Cross-block row traffic incident to each contiguous virtual block."""
+    ppb = geom.pes_per_bank
+    w = [0.0] * geom.n_banks
+    for t in tasks:
+        if t.kind != "move":
+            continue
+        sb = (t.src % geom.total_pes) // ppb
+        for d in _dsts(t):
+            db = (d % geom.total_pes) // ppb
+            if db != sb:
+                w[sb] += t.rows
+                w[db] += t.rows
+    return w
+
+
+def _spread_bank_order(geom: DeviceGeometry) -> list[int]:
+    """Banks ordered so consecutive picks land on different channels/groups."""
+    by_pos: list[int] = []
+    for pos in range(geom.banks_per_group):
+        for g in range(geom.bank_groups_per_channel):
+            for ch in range(geom.channels):
+                by_pos.append(ch * geom.banks_per_channel
+                              + g * geom.banks_per_group + pos)
+    return by_pos
+
+
+def pe_map(geom: DeviceGeometry, policy: str,
+           tasks: Iterable[Task] | None = None) -> list[int]:
+    """virtual PE id -> global PE id, one entry per PE of the device."""
+    ppb, nb = geom.pes_per_bank, geom.n_banks
+    if policy == "locality_first":
+        return list(range(geom.total_pes))
+    if policy == "round_robin":
+        return [(v % nb) * ppb + (v // nb) % ppb
+                for v in range(geom.total_pes)]
+    if policy == "bandwidth_balanced":
+        if tasks is None:
+            raise ValueError("bandwidth_balanced placement needs the task "
+                             "graph to weigh block traffic")
+        weights = _block_weights(tasks, geom)
+        order = _spread_bank_order(geom)
+        # heaviest communicating block -> next bank in the channel-spread
+        # order (stable on ties, so the policy is deterministic)
+        ranked = sorted(range(nb), key=lambda b: (-weights[b], b))
+        assign = {blk: order[i] for i, blk in enumerate(ranked)}
+        return [assign[v // ppb] * ppb + v % ppb
+                for v in range(geom.total_pes)]
+    raise ValueError(f"unknown policy {policy!r}; pick one of {POLICIES}")
+
+
+def place(tasks: Iterable[Task], geom: DeviceGeometry,
+          policy: str = "locality_first") -> list[Task]:
+    """Remap a virtual-PE task graph onto physical banks under a policy."""
+    tasks = list(tasks)
+    return _remap(tasks, pe_map(geom, policy, tasks))
+
+
+def cross_traffic_rows(tasks: Iterable[Task], geom: DeviceGeometry) -> int:
+    """Row deliveries whose endpoints sit in different banks (diagnostic)."""
+    n = 0
+    for t in tasks:
+        if t.kind != "move":
+            continue
+        sb = geom.bank_of(t.src % geom.total_pes)
+        n += sum(t.rows for d in _dsts(t)
+                 if geom.bank_of(d % geom.total_pes) != sb)
+    return n
+
+
+def _sinks(tasks: Sequence[Task]) -> tuple[int, ...]:
+    used = {d for t in tasks for d in t.deps}
+    return tuple(t.uid for t in tasks if t.uid not in used)
+
+
+def _offset(tasks: Sequence[Task], uid_off: int, pe_off: int) -> list[Task]:
+    out = []
+    for t in tasks:
+        out.append(dataclasses.replace(
+            t, uid=t.uid + uid_off,
+            deps=tuple(d + uid_off for d in t.deps),
+            pe=None if t.pe is None else t.pe + pe_off,
+            src=None if t.src is None else t.src + pe_off,
+            dst=None if t.dst is None else (
+                tuple(d + pe_off for d in t.dst) if isinstance(t.dst, tuple)
+                else t.dst + pe_off)))
+    return out
+
+
+def build_partitioned(app: str, mode: Interconnect, geom: DeviceGeometry,
+                      policy: str = "locality_first",
+                      scaling: str = "strong", **kw) -> list[Task]:
+    """Build one of the paper's apps split across every bank of the device.
+
+    ``strong``: the problem keeps its size and its graph spans the whole
+    device's virtual PE space; ``policy`` decides the bank placement.
+    ``weak``: every bank runs its own bank-sized instance (problem grows
+    with the device) and each replica streams its result slices to an
+    aggregator on bank 0 — the cross-bank reduction every data-parallel
+    deployment pays.  Replicas are bank-local by construction, so ``policy``
+    only shapes the strong-scaling layout.
+    """
+    if scaling == "strong":
+        if app in ("bfs", "dfs"):
+            kw.setdefault("n_stripes", geom.n_banks)
+        tasks = taskgraph.build(app, mode, n_pes=geom.total_pes, **kw)
+        return place(tasks, geom, policy)
+    if scaling != "weak":
+        raise ValueError(f"scaling must be 'weak' or 'strong', got {scaling!r}")
+
+    ppb = geom.pes_per_bank
+    all_tasks: list[Task] = []
+    agg_pe = 1 % ppb            # bank-0 aggregator subarray
+    t_add = pluto.op32_latency_ns("add", mode)
+    prev_red: int | None = None
+    for b in range(geom.n_banks):
+        replica = taskgraph.build(app, mode, n_pes=ppb, **kw)
+        replica = _offset(replica, uid_off=len(all_tasks), pe_off=b * ppb)
+        sinks = _sinks(replica)
+        all_tasks.extend(replica)
+        if b == 0:
+            continue
+        # result hand-off: one 32-bit row-vector of partials per replica
+        mv = Task(len(all_tasks), "move", deps=sinks, src=b * ppb + agg_pe,
+                  dst=agg_pe, rows=taskgraph.SLICES_32, tag=f"reduce.mv b{b}")
+        all_tasks.append(mv)
+        red = Task(len(all_tasks), "op",
+                   deps=(mv.uid,) if prev_red is None
+                   else (mv.uid, prev_red),
+                   pe=agg_pe, duration=t_add, tag=f"reduce.add b{b}")
+        all_tasks.append(red)
+        prev_red = red.uid
+    return all_tasks

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import compat
 from repro.core.overlap import compression
 from repro.models.model import Model
 from repro.optim import adamw
@@ -97,7 +98,7 @@ def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
     auto = frozenset(a for a in mesh.axis_names if a != "pod")
 
     def podded(state, batch):
-        return jax.shard_map(
+        return compat.shard_map(
             step, mesh=mesh,
             in_specs=(P(), P("pod")), out_specs=(P(), P()),
             auto=auto, check_vma=False)(state, batch)

@@ -1,0 +1,53 @@
+"""Hypothesis import shim: property-based tests skip when hypothesis is absent.
+
+Not every runtime ships ``hypothesis``.  A bare ``import hypothesis`` makes
+the whole module fail collection, and ``pytest.importorskip("hypothesis")``
+at module scope would skip the example-based tests in the same file too.
+Importing through this module instead keeps those runnable: when hypothesis
+is missing, ``@hypothesis.given`` becomes a skip marker and the strategy
+namespace becomes an inert chainable stub (it is only touched at decoration
+time, never executed).
+"""
+
+from __future__ import annotations
+
+import types
+
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Chainable stand-in for strategy objects (never executed)."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies("hypothesis.strategies")
+
+    def _given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install hypothesis)")(fn)
+        return deco
+
+    def _settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    hypothesis = types.SimpleNamespace(
+        given=_given, settings=_settings, strategies=st)

@@ -1,0 +1,213 @@
+"""Device layer: geometry, routing, single-bank equivalence, partitioning."""
+
+import pytest
+
+from repro.core import scheduler as core_sched
+from repro.core import taskgraph
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+from repro.device import (POLICIES, DeviceGeometry, build_partitioned,
+                          cross_traffic_rows, pe_map, place)
+from repro.device import interconnect as xbar
+from repro.device import scheduler as dev_sched
+from repro.device.geometry import SINGLE_BANK
+
+#: bank-level smoke sizes: full apps, reduced problem sizes
+SMALL = {"mm": dict(n=30), "pmm": dict(n=30), "ntt": dict(n=64),
+         "bfs": dict(n_nodes=60), "dfs": dict(n_nodes=60)}
+
+
+class TestGeometry:
+    def test_defaults_single_bank(self):
+        g = DeviceGeometry()
+        assert g.n_banks == 1 and g.total_pes == 16
+        assert g.route(0, 0) == "intra"
+
+    @pytest.mark.parametrize("bad", [
+        dict(channels=0), dict(banks_per_channel=-1), dict(pes_per_bank=0),
+        dict(banks_per_channel=3, bank_groups_per_channel=2),
+    ])
+    def test_validation(self, bad):
+        with pytest.raises(ValueError):
+            DeviceGeometry(**bad)
+
+    def test_addressing_roundtrip(self):
+        g = DeviceGeometry(channels=2, banks_per_channel=4,
+                           bank_groups_per_channel=2, pes_per_bank=8)
+        assert g.n_banks == 8 and g.total_pes == 64
+        for pe in range(g.total_pes):
+            assert g.pe(g.bank_of(pe), g.local_of(pe)) == pe
+        # bank 5 = channel 1, second bank of its channel -> group 1 of ch 1
+        assert g.channel_of_bank(5) == 1
+        assert g.group_of_bank(0) == g.group_of_bank(1) == 0
+        assert g.group_of_bank(2) == 1
+        assert g.group_of_bank(4) == 2      # first group of channel 1
+
+    def test_route_classes(self):
+        g = DeviceGeometry(channels=2, banks_per_channel=4,
+                           bank_groups_per_channel=2)
+        assert g.route(0, 0) == "intra"
+        assert g.route(0, 1) == "group"
+        assert g.route(0, 2) == "channel"
+        assert g.route(0, 4) == "device"
+
+    def test_transit_cost_ordering(self):
+        group = xbar.transit_ns_per_row("group")
+        channel = xbar.transit_ns_per_row("channel")
+        device = xbar.transit_ns_per_row("device")
+        assert 0 < group < channel < device
+        with pytest.raises(ValueError):
+            xbar.transit_ns_per_row("intra")
+
+
+class TestSingleBankEquivalence:
+    """A 1-channel/1-bank device must reproduce core.scheduler bit-for-bit."""
+
+    @pytest.mark.parametrize("app", sorted(taskgraph.APPS))
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_apps_identical(self, app, mode):
+        tasks = taskgraph.build(app, mode, **SMALL[app])
+        a = core_sched.schedule(tasks, mode)
+        b = dev_sched.schedule(tasks, mode, SINGLE_BANK)
+        assert b.makespan_ns == a.makespan_ns
+        assert b.op_busy_ns == a.op_busy_ns
+        assert b.move_busy_ns == a.move_busy_ns
+        assert b.stall_ns == a.stall_ns
+        assert (b.n_ops, b.n_moves, b.n_rows_moved) == \
+            (a.n_ops, a.n_moves, a.n_rows_moved)
+        assert b.finish_times == a.finish_times
+        assert b.transfer_energy_j == a.transfer_energy_j
+        assert b.cross_rows == 0 and b.n_cross_moves == 0
+
+    def test_compare_improvement_api(self):
+        tasks = taskgraph.build("mm", Interconnect.LISA, n=20)
+        res = dev_sched.compare(tasks, SINGLE_BANK)
+        core = core_sched.compare(tasks)
+        assert dev_sched.improvement(res) == \
+            pytest.approx(core_sched.improvement(core))
+
+    def test_empty_graph_zero_improvement(self):
+        assert dev_sched.improvement(dev_sched.compare([], SINGLE_BANK)) == 0.0
+        assert core_sched.improvement(core_sched.compare([])) == 0.0
+
+
+class TestCrossBankMoves:
+    GEOM = DeviceGeometry(channels=2, banks_per_channel=4,
+                          bank_groups_per_channel=2)
+
+    def test_routes_priced_and_counted(self):
+        # same-group, cross-group and cross-channel single moves
+        for dst, route in [(20, "group"), (40, "channel"), (70, "device")]:
+            tasks = [Task(0, "move", src=5, dst=dst, rows=4)]
+            for mode in Interconnect:
+                r = dev_sched.schedule(tasks, mode, self.GEOM)
+                assert r.rows_by_route == {route: 4}
+                assert r.n_cross_moves == 1
+
+    def test_farther_routes_cost_more(self):
+        for mode in Interconnect:
+            spans = []
+            for dst in (20, 40, 70):
+                tasks = [Task(0, "move", src=5, dst=dst, rows=4)]
+                spans.append(dev_sched.schedule(tasks, mode,
+                                                self.GEOM).makespan_ns)
+            assert spans[0] < spans[1] < spans[2]
+
+    def test_lisa_stalls_both_banks_sharedpim_neither(self):
+        # an independent op inside the source bank's drain span, and one in
+        # the destination bank's fill span
+        tasks = [Task(0, "move", src=5, dst=19, rows=4),
+                 Task(1, "op", pe=2, duration=100.0),
+                 Task(2, "op", pe=17, duration=100.0)]
+        lisa = dev_sched.schedule(tasks, Interconnect.LISA, self.GEOM)
+        sp = dev_sched.schedule(tasks, Interconnect.SHARED_PIM, self.GEOM)
+        assert lisa.stall_ns > 0
+        assert sp.stall_ns == 0
+        # Shared-PIM finishes both ops during the transfer
+        assert sp.finish_times[1] == 100.0 and sp.finish_times[2] == 100.0
+        assert lisa.finish_times[1] > 100.0
+
+    def test_shared_bus_contention_serializes(self):
+        # two same-group transfers from different source banks share one
+        # bank-group bus: their transit legs cannot overlap
+        g = DeviceGeometry(channels=1, banks_per_channel=2)
+        one = [Task(0, "move", src=1, dst=17, rows=8)]
+        two = one + [Task(1, "move", src=20, dst=2, rows=8)]
+        for mode in Interconnect:
+            a = dev_sched.schedule(one, mode, g).makespan_ns
+            b = dev_sched.schedule(two, mode, g).makespan_ns
+            assert b > a
+
+    def test_cross_bank_sharedpim_still_wins(self):
+        tasks = taskgraph.build("mm", Interconnect.LISA, n=20,
+                                n_pes=self.GEOM.total_pes)
+        res = dev_sched.compare(tasks, self.GEOM)
+        assert dev_sched.improvement(res) > 0
+
+    def test_broadcast_split_across_banks(self):
+        tasks = [Task(0, "move", src=0, dst=(1, 17, 18), rows=2)]
+        r = dev_sched.schedule(tasks, Interconnect.SHARED_PIM, self.GEOM)
+        assert r.rows_by_route == {"intra": 2, "group": 4}
+        assert r.n_rows_moved == 6
+
+
+class TestPartitioning:
+    GEOM = DeviceGeometry(channels=2, banks_per_channel=2)
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_pe_map_is_permutation(self, policy):
+        tasks = taskgraph.build("mm", Interconnect.LISA, n=20,
+                                n_pes=self.GEOM.total_pes)
+        m = pe_map(self.GEOM, policy, tasks)
+        assert sorted(m) == list(range(self.GEOM.total_pes))
+
+    def test_round_robin_scatters_locality_preserves(self):
+        tasks = taskgraph.build("mm", Interconnect.LISA, n=20,
+                                n_pes=self.GEOM.total_pes)
+        rr = cross_traffic_rows(place(tasks, self.GEOM, "round_robin"),
+                                self.GEOM)
+        loc = cross_traffic_rows(place(tasks, self.GEOM, "locality_first"),
+                                 self.GEOM)
+        assert rr > loc
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("app", sorted(taskgraph.APPS))
+    def test_end_to_end_partitioned_schedule(self, policy, app):
+        res = {}
+        for mode in Interconnect:
+            tasks = build_partitioned(app, mode, self.GEOM, policy=policy,
+                                      **SMALL[app])
+            r = dev_sched.schedule(tasks, mode, self.GEOM)
+            # all tasks executed, dependencies respected
+            assert len(r.finish_times) == len(tasks)
+            by_uid = {t.uid: t for t in tasks}
+            for uid, t in by_uid.items():
+                for d in t.deps:
+                    assert r.finish_times[d] <= r.finish_times[uid] + 1e-9
+            res[mode] = r
+        assert res[Interconnect.SHARED_PIM].makespan_ns <= \
+            res[Interconnect.LISA].makespan_ns + 1e-6
+
+    def test_weak_scaling_adds_reduction_traffic(self):
+        tasks = build_partitioned("mm", Interconnect.LISA, self.GEOM,
+                                  scaling="weak", n=20)
+        assert cross_traffic_rows(tasks, self.GEOM) == \
+            (self.GEOM.n_banks - 1) * taskgraph.SLICES_32
+
+    def test_weak_scaling_advantage_grows_with_banks(self):
+        gaps = []
+        for nb in (1, 2, 4):
+            g = DeviceGeometry(channels=1, banks_per_channel=nb)
+            res = {}
+            for mode in Interconnect:
+                tasks = build_partitioned("mm", mode, g, scaling="weak", n=20)
+                res[mode.value] = dev_sched.schedule(tasks, mode, g)
+            gaps.append(res["lisa"].makespan_ns
+                        - res["shared_pim"].makespan_ns)
+        assert gaps[0] <= gaps[1] <= gaps[2]
+
+    def test_bfs_striping_requires_divisibility(self):
+        with pytest.raises(ValueError):
+            taskgraph.bfs(n_nodes=10, n_pes=16, n_stripes=5)
+        with pytest.raises(ValueError):
+            taskgraph.bfs(n_nodes=10, n_pes=16, n_stripes=8)  # stripes < 3 PEs

@@ -4,12 +4,12 @@ All kernels run in interpret mode on CPU (the TPU BlockSpecs are exercised
 structurally; numerics are identical by construction of interpret mode).
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
 
 from repro.kernels import ops, ref
 from repro.kernels.lut_matmul import GROUP, quantize_weights

@@ -2,12 +2,12 @@
 
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
 
 from repro.configs import registry
 from repro.models import layers, moe

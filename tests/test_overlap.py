@@ -1,7 +1,10 @@
 """SharedBus overlap module: multi-device numerics in a subprocess.
 
 The main pytest process must keep jax at 1 CPU device (dry-run rules), so
-the 8-device checks run in a child interpreter.
+the 8-device checks run in a child interpreter.  If the child cannot get a
+multi-device platform (e.g. a GPU runtime that ignores
+``xla_force_host_platform_device_count``) it prints a skip marker and the
+test skips instead of failing on its stdout.
 """
 
 import os
@@ -13,47 +16,36 @@ import pytest
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
+SKIP_MARKER = "SKIP_NEED_MULTI_DEVICE"
 
-@pytest.mark.slow
-def test_overlap_multidevice():
+
+def _run_child(script: str, ok_marker: str) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = str(ROOT / "src")
     proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests" / "distributed" /
-                             "check_overlap.py")],
+        [sys.executable, str(ROOT / "tests" / "distributed" / script)],
         capture_output=True, text=True, env=env, timeout=900)
+    if SKIP_MARKER in proc.stdout:
+        pytest.skip("child interpreter has only one JAX device")
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
-    assert "ALL_OVERLAP_CHECKS_PASSED" in proc.stdout
+    assert ok_marker in proc.stdout
+
+
+@pytest.mark.slow
+def test_overlap_multidevice():
+    _run_child("check_overlap.py", "ALL_OVERLAP_CHECKS_PASSED")
 
 
 @pytest.mark.slow
 def test_overlap_under_training():
     """config.overlap='shared_bus' in the full train step: compiles with
     ring collective-permutes and matches the baseline loss exactly."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = str(ROOT / "src")
-    proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests" / "distributed" /
-                             "check_overlap_train.py")],
-        capture_output=True, text=True, env=env, timeout=900)
-    assert proc.returncode == 0, \
-        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
-    assert "OVERLAP_TRAIN_OK" in proc.stdout
+    _run_child("check_overlap_train.py", "OVERLAP_TRAIN_OK")
 
 
 @pytest.mark.slow
 def test_pipeline_parallel():
     """GPipe-style pipeline over a mesh axis with SharedBus hand-off."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = str(ROOT / "src")
-    proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests" / "distributed" /
-                             "check_pipeline.py")],
-        capture_output=True, text=True, env=env, timeout=900)
-    assert proc.returncode == 0, \
-        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
-    assert "PIPELINE_OK" in proc.stdout
+    _run_child("check_pipeline.py", "PIPELINE_OK")

@@ -1,10 +1,10 @@
 """Bit-true property tests: LUT-based arithmetic == native integer arithmetic."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
 
 from repro.core import executor
 from repro.core import pluto_alu as alu

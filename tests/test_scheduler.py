@@ -1,8 +1,8 @@
 """Scheduler invariants: dependency order, resource exclusivity, STALL/NOP."""
 
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
 
 from repro.core import scheduler as sch
 from repro.core import taskgraph
