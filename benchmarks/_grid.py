@@ -1,0 +1,35 @@
+"""Shared problem-size grid for the device-scale benchmarks.
+
+``device_scaling.py`` and ``sweep.py`` must measure the *same* workloads;
+the paper-sized problems, the CI smoke variants, and the strong-scaling
+work-pinning rule live here so they cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from repro.core import taskgraph
+from repro.device.geometry import DeviceGeometry
+
+#: paper-sized problems (Fig 8) and the CI-sized smoke variants
+APP_KW = {
+    "mm": dict(n=200), "pmm": dict(n=300), "ntt": dict(n=512),
+    "bfs": dict(n_nodes=1000), "dfs": dict(n_nodes=1000),
+}
+APP_KW_SMOKE = {
+    "mm": dict(n=40), "pmm": dict(n=40), "ntt": dict(n=64),
+    "bfs": dict(n_nodes=120), "dfs": dict(n_nodes=120),
+}
+
+
+def strong_kw(biggest: DeviceGeometry) -> dict[str, dict]:
+    """Per-app kwargs that pin strong-scaling work to the largest device.
+
+    The mm/pmm output slice and the ntt group count default to device-
+    saturating values that grow with n_pes — pin each to the size that
+    saturates the LARGEST swept device, so smaller devices queue the same
+    total work.  (bfs/dfs traverse a fixed node count already.)
+    """
+    slice_out = taskgraph.default_out_slice(biggest.total_pes)
+    return {"mm": {"out_rows": slice_out},
+            "pmm": {"out_coeffs": slice_out},
+            "ntt": {"groups": biggest.total_pes}}

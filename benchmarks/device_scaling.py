@@ -34,20 +34,13 @@ import json
 import sys
 import time
 
-from repro.core import taskgraph
+try:
+    from benchmarks._grid import APP_KW, APP_KW_SMOKE, strong_kw
+except ImportError:      # run as a script: benchmarks/ itself is on sys.path
+    from _grid import APP_KW, APP_KW_SMOKE, strong_kw
 from repro.core.pluto import Interconnect
-from repro.device import (POLICIES, DeviceGeometry, build_partitioned,
-                          improvement, schedule)
-
-#: paper-sized problems (Fig 8) and the CI-sized smoke variants
-APP_KW = {
-    "mm": dict(n=200), "pmm": dict(n=300), "ntt": dict(n=512),
-    "bfs": dict(n_nodes=1000), "dfs": dict(n_nodes=1000),
-}
-APP_KW_SMOKE = {
-    "mm": dict(n=40), "pmm": dict(n=40), "ntt": dict(n=64),
-    "bfs": dict(n_nodes=120), "dfs": dict(n_nodes=120),
-}
+from repro.device import (POLICIES, BatchRunner, DeviceGeometry, SweepConfig,
+                          improvement)
 
 
 def _geometry(banks: int, channels: int) -> DeviceGeometry:
@@ -57,12 +50,13 @@ def _geometry(banks: int, channels: int) -> DeviceGeometry:
 
 
 def run_point(app: str, kw: dict, geom: DeviceGeometry, scaling: str,
-              policy: str) -> dict:
+              policy: str, runner: BatchRunner) -> dict:
+    """One sweep cell, scheduled through the batch runner's cached fast path."""
     res = {}
     for mode in Interconnect:
-        tasks = build_partitioned(app, mode, geom, policy=policy,
-                                  scaling=scaling, **kw)
-        res[mode.value] = schedule(tasks, mode, geom)
+        cfg = SweepConfig.make(app, mode, geom, policy=policy,
+                               scaling=scaling, **kw)
+        res[mode.value] = runner.run_one(cfg)
     lisa, sp = res["lisa"], res["shared_pim"]
     return {
         "app": app,
@@ -127,26 +121,21 @@ def main(argv=None) -> int:
     app_kw = APP_KW_SMOKE if args.smoke else APP_KW
     banks = args.banks or ([1, 2, 4] if args.smoke else [1, 2, 4, 8])
 
-    # Strong scaling must hold total work fixed across the sweep.  The
-    # mm/pmm output slice and the ntt group count default to device-
-    # saturating values that grow with n_pes — pin each to the size that
-    # saturates the LARGEST swept device, so small devices queue the same
-    # work.  (bfs/dfs traverse a fixed node count already.)
-    biggest = _geometry(max(banks), args.channels)
-    slice_out = taskgraph.default_out_slice(biggest.total_pes)
-    strong_kw = {"mm": {"out_rows": slice_out},
-                 "pmm": {"out_coeffs": slice_out},
-                 "ntt": {"groups": biggest.total_pes}}
+    # Strong scaling must hold total work fixed across the sweep: pin the
+    # device-saturating defaults to the largest swept device (_grid helper).
+    pin = strong_kw(_geometry(max(banks), args.channels))
 
     t0 = time.perf_counter()
+    runner = BatchRunner()
     sweep: list[dict] = []
     for app, kw in app_kw.items():
         for scaling in ("weak", "strong"):
-            kw_s = {**kw, **strong_kw.get(app, {})} if scaling == "strong" \
+            kw_s = {**kw, **pin.get(app, {})} if scaling == "strong" \
                 else kw
             for nb in banks:
                 geom = _geometry(nb, args.channels)
-                p = run_point(app, kw_s, geom, scaling, "locality_first")
+                p = run_point(app, kw_s, geom, scaling, "locality_first",
+                              runner)
                 sweep.append(p)
                 print(f"{app:4s} {scaling:6s} banks={nb:2d} "
                       f"imp={p['improvement']:6.3f} "
@@ -158,9 +147,9 @@ def main(argv=None) -> int:
     big = _geometry(max(banks), args.channels)
     if big.n_banks > 1:
         for app, kw in app_kw.items():
-            kw_s = {**kw, **strong_kw.get(app, {})}
+            kw_s = {**kw, **pin.get(app, {})}
             for policy in POLICIES:
-                p = run_point(app, kw_s, big, "strong", policy)
+                p = run_point(app, kw_s, big, "strong", policy, runner)
                 policies.append(p)
                 print(f"policy {policy:20s} {app:4s} "
                       f"imp={p['improvement']:6.3f} "

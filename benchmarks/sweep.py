@@ -1,0 +1,223 @@
+"""One-pass sweep benchmark: batch runner vs the legacy per-config loop.
+
+Runs the Fig-8 app grid x placement-policy x interconnect shoot-out
+(strong scaling on the largest device; the weak-scaling bank sweep is
+``device_scaling.py``'s axis) through
+:class:`repro.device.batch.BatchRunner` in a single call, then re-runs the
+identical grid as the pre-refactor per-config loop — legacy task-object
+graph composition (:func:`repro.device.reference.build_partitioned`) plus
+the legacy pure-Python event engine (:func:`repro.device.reference
+.schedule`), with every cross-config cache cleared between configs.
+
+Written to ``BENCH_sweep.json``:
+
+* per-config results (makespan per interconnect, improvement, cross rows);
+* both wall times and the speedup, asserted ``>= --min-speedup``
+  (5x for the full grid; the CI smoke run uses a lower bar because fixed
+  overheads dominate its tiny problems);
+* a bit-for-bit equivalence check: every observable of every batch result
+  (makespan, busy/stall, counts, energy, per-task finish times, route and
+  bus breakdowns) must equal the legacy loop's — the refactor speeds the
+  simulator up without changing a single bit of its output.
+
+The process exits non-zero if the equivalence check fails, the speedup is
+below the bar, or the batch pass exceeds ``--budget-s`` (the CI wall-clock
+budget that catches engine performance regressions).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/sweep.py              # full grid
+    PYTHONPATH=src python benchmarks/sweep.py --smoke      # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+
+try:
+    from benchmarks._grid import APP_KW, APP_KW_SMOKE, strong_kw
+except ImportError:      # run as a script: benchmarks/ itself is on sys.path
+    from _grid import APP_KW, APP_KW_SMOKE, strong_kw
+from repro.core.pluto import Interconnect
+from repro.device import (POLICIES, BatchRunner, DeviceGeometry, SweepConfig,
+                          improvement)
+from repro.device import batch as dbatch
+from repro.device import reference as dev_ref
+
+#: every observable a schedule result exposes (the equivalence contract)
+OBSERVABLES = ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns",
+               "n_ops", "n_moves", "n_rows_moved", "n_cross_moves",
+               "transfer_energy_j", "rows_by_route", "bus_busy_ns",
+               "finish_times")
+
+
+def build_grid(app_kw: dict, banks: list[int], channels: int
+               ) -> list[SweepConfig]:
+    """The full app x placement-policy x interconnect grid (strong scaling)."""
+    big = DeviceGeometry(channels=channels, banks_per_channel=max(banks))
+    pin = strong_kw(big)
+    cfgs = []
+    for app, kw in app_kw.items():
+        kws = {**kw, **pin.get(app, {})}
+        for policy in POLICIES:
+            for mode in Interconnect:
+                cfgs.append(SweepConfig.make(app, mode, big, policy=policy,
+                                             **kws))
+    return cfgs
+
+
+def _timed(fn) -> tuple[list, float]:
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        results = fn()
+        return results, time.perf_counter() - t0
+    finally:
+        gc.enable()
+
+
+def _batch_pass(cfgs: list[SweepConfig]) -> list:
+    """The new path: one BatchRunner call over the whole grid, cold caches."""
+    dbatch.clear_caches()
+    return BatchRunner().run(cfgs)
+
+
+def _reference_pass(cfgs: list[SweepConfig]) -> list:
+    """The pre-refactor equivalent: rebuild + legacy-schedule per config."""
+    results = []
+    for c in cfgs:
+        # the legacy loop had no cross-config reuse
+        dbatch.clear_caches()
+        tasks = dev_ref.build_partitioned(
+            c.app, c.mode, c.geometry, policy=c.policy,
+            scaling=c.scaling, **c.kwargs)
+        results.append(dev_ref.schedule(tasks, c.mode, c.geometry))
+    return results
+
+
+def time_passes(cfgs: list[SweepConfig], repeats: int
+                ) -> tuple[list, float, list, float]:
+    """Best-of-``repeats`` wall time for both passes, interleaved.
+
+    Interleaving (batch, loop, batch, loop, …) plus taking each side's best
+    keeps shared-machine noise and thermal drift from biasing the ratio in
+    either direction.
+    """
+    batch_res, t_batch = None, float("inf")
+    ref_res, t_loop = None, float("inf")
+    for _ in range(repeats):
+        batch_res, w = _timed(lambda: _batch_pass(cfgs))
+        t_batch = min(t_batch, w)
+        ref_res, w = _timed(lambda: _reference_pass(cfgs))
+        t_loop = min(t_loop, w)
+    return batch_res, t_batch, ref_res, t_loop
+
+
+def equivalence_mismatches(batch: list, ref: list) -> list[str]:
+    bad = []
+    for i, (a, b) in enumerate(zip(batch, ref)):
+        for field in OBSERVABLES:
+            if getattr(a, field) != getattr(b, field):
+                bad.append(f"config {i}: {field} differs")
+    return bad
+
+
+def summarize(cfgs: list[SweepConfig], results: list) -> list[dict]:
+    """Pair the two interconnects of each cell into one summary row."""
+    by_cell: dict = {}
+    for cfg, r in zip(cfgs, results):
+        cell = (cfg.app, cfg.geometry.n_banks, cfg.policy, cfg.scaling)
+        by_cell.setdefault(cell, {})[cfg.mode.value] = r
+    rows = []
+    for (app, nb, policy, scaling), res in by_cell.items():
+        lisa, sp = res["lisa"], res["shared_pim"]
+        rows.append({
+            "app": app, "banks": nb, "policy": policy, "scaling": scaling,
+            "lisa_makespan_ns": lisa.makespan_ns,
+            "shared_pim_makespan_ns": sp.makespan_ns,
+            "improvement": improvement(res),
+            "cross_rows": lisa.cross_rows,
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized problems and a short bank sweep")
+    ap.add_argument("--banks", default=None,
+                    help="comma-separated bank counts, e.g. 2,4,8")
+    ap.add_argument("--channels", type=int, default=1)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail below this batch-vs-loop speedup "
+                         "(default: 5.0 full, 1.5 smoke)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="time each pass this many times, keep the best "
+                         "(noise robustness on shared machines)")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if the batch pass exceeds this wall time")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args(argv)
+
+    app_kw = APP_KW_SMOKE if args.smoke else APP_KW
+    banks = ([int(x) for x in args.banks.split(",")] if args.banks
+             else ([2, 4] if args.smoke else [2, 4, 8]))
+    # tiny smoke problems leave fixed overheads dominant, so the smoke bar
+    # only guards against gross regressions; the full grid must hit 5x
+    min_speedup = args.min_speedup if args.min_speedup is not None \
+        else (1.5 if args.smoke else 5.0)
+
+    cfgs = build_grid(app_kw, banks, args.channels)
+    print(f"grid: {len(cfgs)} configurations "
+          f"({len(app_kw)} apps x {len(POLICIES)} policies x "
+          f"2 interconnects at {max(banks)} banks)")
+
+    batch_res, t_batch, ref_res, t_loop = time_passes(cfgs, args.repeats)
+    print(f"batch runner: {t_batch:.2f}s (best of {args.repeats})")
+    print(f"per-config reference loop: {t_loop:.2f}s "
+          f"(best of {args.repeats})")
+    speedup = t_loop / t_batch
+    print(f"speedup: {speedup:.2f}x (bar: {min_speedup:.1f}x)")
+
+    mismatches = equivalence_mismatches(batch_res, ref_res)
+    failures = list(mismatches)
+    if speedup < min_speedup:
+        failures.append(f"speedup {speedup:.2f}x below bar {min_speedup}x")
+    if args.budget_s is not None and t_batch > args.budget_s:
+        failures.append(f"batch pass {t_batch:.2f}s over budget "
+                        f"{args.budget_s}s")
+
+    out = {
+        "config": {
+            "smoke": args.smoke,
+            "banks": banks,
+            "channels": args.channels,
+            "apps": app_kw,
+            "n_configs": len(cfgs),
+        },
+        "batch_wall_s": t_batch,
+        "loop_wall_s": t_loop,
+        "speedup": speedup,
+        "min_speedup": min_speedup,
+        "bit_for_bit_identical": not mismatches,
+        "failures": failures,
+        "results": summarize(cfgs, batch_res),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    if failures:
+        print("FAILURES:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print(f"batch == legacy loop bit-for-bit on {len(cfgs)} configs; "
+          f"{speedup:.2f}x faster")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,7 +14,6 @@ import jax
 
 from repro.configs import registry
 from repro.data.pipeline import DataConfig
-from repro.launch.mesh import make_host_mesh
 from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.train import train_step as ts

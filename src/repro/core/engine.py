@@ -1,0 +1,488 @@
+"""Resource-token discrete-event engine shared by every scheduler layer.
+
+The paper's thesis is that interconnects differ only in *what a move
+occupies while in flight*: LISA links the bitlines of every subarray it
+crosses (compute stalls), Shared-PIM claims two shared-row tokens plus the
+BK-bus (compute continues).  This module turns that observation into the
+simulator's architecture: **all** interconnect semantics — single-bank LISA
+spans, Shared-PIM tx/rx tokens and broadcast, device-level bank-group and
+channel buses — are expressed as declarative *claim segments* over a flat
+array of resource tokens, and one event loop executes them.
+
+A :class:`ResourceModel` compiles a :class:`~repro.core.ir.TaskGraph` into a
+:class:`Compiled` plan: for each op the resource token it occupies, and for
+each move a tuple of segments, each either
+
+* **circuit-switched** (:data:`CIRCUIT`): claim every listed token for the
+  segment's whole duration — LISA's semantics, intra-bank and cross-bank
+  alike.  Tokens flagged as stalled PEs accrue stall time.
+* **store-and-forward** (:data:`SAF`): three pipelined legs (drain /
+  transit / fill) that each hold only their own tokens for their own
+  window — Shared-PIM's semantics for cross-bank streams.
+
+The event loop (:func:`run`) is a list scheduler: ready tasks are ordered by
+a **total** priority key ``(-critical_path, ready_time, uid)`` — the final
+``uid`` component makes tie-breaking deterministic by construction, never an
+accident of object identity or heap insertion order.  The critical-path
+priorities are computed by a NumPy-vectorized *levelized* sweep
+(:func:`critical_path`): tasks are bucketed by topological depth and each
+level's longest-path values are reduced in one vector operation, replacing
+the legacy per-task Python recursion.
+
+The engine reproduces the legacy schedulers bit-for-bit (asserted against
+golden schedules in ``tests/test_golden_equivalence.py``): accounting
+accumulates in the same order and with the same float operations the legacy
+code used, down to the per-span stall subtotals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import copy_models
+from repro.core.ir import OP, TaskGraph
+from repro.core.pluto import Interconnect
+
+#: move-segment archetypes (first element of every segment tuple)
+CIRCUIT, SAF = 0, 1
+
+
+# --- cached per-row transfer latencies ------------------------------------------
+# The legacy schedulers re-derived CopyResult dataclasses for every move on
+# every pop; the per-row coefficients depend only on (mechanism, distance /
+# fan-out), so they are memoized here once per process.
+
+_LISA_ROW_NS: dict[int, float] = {}
+_SP_BCAST_NS: dict[int, float] = {}
+_SP_ROW_NS: float | None = None
+
+
+def _lisa_row_ns(dist: int) -> float:
+    lat = _LISA_ROW_NS.get(dist)
+    if lat is None:
+        lat = _LISA_ROW_NS[dist] = \
+            copy_models.lisa_copy(distance=dist).latency_ns
+    return lat
+
+
+def _sp_row_ns() -> float:
+    global _SP_ROW_NS
+    if _SP_ROW_NS is None:
+        _SP_ROW_NS = copy_models.sharedpim_copy().latency_ns
+    return _SP_ROW_NS
+
+
+def _sp_bcast_ns(fanout: int) -> float:
+    lat = _SP_BCAST_NS.get(fanout)
+    if lat is None:
+        lat = _SP_BCAST_NS[fanout] = copy_models.sharedpim_broadcast(
+            dests=tuple(range(1, fanout + 1))).latency_ns
+    return lat
+
+
+def move_latency(mode: Interconnect, src: int, dsts: Sequence[int],
+                 rows: int) -> float:
+    """Contention-free latency of one move (identical to the legacy model).
+
+    LISA: one serial distance-priced copy per destination.  Shared-PIM:
+    distance independent; broadcasts amortize tRAS across <=4 destinations
+    per bus transaction.
+    """
+    if mode is Interconnect.LISA:
+        total = 0.0
+        for d in dsts:
+            dist = abs(d - src)
+            if dist < 1:
+                dist = 1
+            total += rows * _lisa_row_ns(dist)
+        return total
+    if len(dsts) == 1:
+        return rows * _sp_row_ns()
+    lat = 0.0
+    remaining = list(dsts)
+    while remaining:
+        grp = remaining[:4]
+        remaining = remaining[4:]
+        lat += rows * _sp_bcast_ns(len(grp))
+    return lat
+
+
+# --- compiled plans -------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Compiled:
+    """Everything the event loop needs, precomputed as flat Python lists.
+
+    ``exec_plan`` holds one pre-bound tuple per task, dispatched on length:
+    ``(rid, duration)`` for an op (2); ``(rids, stall_counts, dur)`` for the
+    common single-segment intra-bank move (3); ``(segments,)`` for the
+    general multi-segment move (1).
+
+    Integer schedule statistics — task counts, rows delivered, rows per
+    route class, cross-move count — are order independent, so they are
+    summed here at compile time instead of inside the event loop; only the
+    float accumulators (busy/stall/energy), whose rounding depends on
+    accumulation order, stay in the loop.
+
+    Segment tuples (one move = one or more segments, executed in order, all
+    floored at the move's dependency-ready time):
+
+    ``(CIRCUIT, rids, stall_counts, dur, busy_keys, energy_j)``
+        claim every token in ``rids`` for ``dur`` ns.  ``stall_counts``
+        groups the stalled-PE tokens: each group's stall time is subtotaled
+        before accumulating (bit-compatible with the legacy span
+        accounting).  Each key in ``busy_keys`` accrues the segment span.
+
+    ``(SAF, leg1, leg2, leg3, drain, transit, fill, drain1, transit1,
+    fill1, mb, busy_keys, energy_j)``
+        store-and-forward: leg *k+1* may start one per-row time
+        (``drain1``/``transit1``) after leg *k* starts; the final delivery
+        ends no earlier than one per-row fill (``fill1``) after transit
+        ends.  ``mb`` is the move-busy charge (sum of leg durations).
+    """
+
+    n_resources: int
+    exec_plan: list         # per-task execution tuple (see above)
+    prio_dur: list          # float priority duration per task
+    n_ops: int = 0
+    n_moves: int = 0
+    n_rows: int = 0         # rows x fan-out, summed over moves
+    n_cross: int = 0        # moves with at least one off-bank destination
+    rows_by_route: dict = dataclasses.field(default_factory=dict)
+
+
+class ResourceModel:
+    """Compiles a TaskGraph onto a concrete set of resource tokens."""
+
+    mode: Interconnect
+
+    def compile(self, g: TaskGraph) -> Compiled:
+        raise NotImplementedError
+
+
+class BankModel(ResourceModel):
+    """One DRAM bank: ``n_pes`` subarray PEs plus the intra-bank interconnect.
+
+    Token layout: PE ``p`` -> ``p``; BK-bus -> ``n_pes``; transmit shared row
+    of ``p`` -> ``n_pes + 1 + p``; receive shared row -> ``2*n_pes + 1 + p``.
+
+    * LISA move: one CIRCUIT segment claiming every PE token in
+      ``[min(src, *dsts), max(src, *dsts)]`` — computation there stalls.
+    * Shared-PIM move: one CIRCUIT segment claiming the bus, the source tx
+      token and each destination's rx token — PEs keep computing.
+    """
+
+    def __init__(self, mode: Interconnect, n_pes: int = 16):
+        self.mode = mode
+        self.n_pes = n_pes
+        # app graphs repeat a handful of (src, dsts, rows) move signatures
+        # thousands of times; compiled segments are pure in those
+        # coordinates, so memoize per signature (keyed on the RAW ids — the
+        # priority latency is priced on them, pre-wrap)
+        self._move_cache: dict = {}
+
+    def compile(self, g: TaskGraph) -> Compiled:
+        n_pes = self.n_pes
+        mode = self.mode
+        lisa = mode is Interconnect.LISA
+        bus = n_pes
+        tx0 = n_pes + 1
+        rx0 = 2 * n_pes + 1
+        move_cache = self._move_cache
+
+        src = g.src.tolist()
+        rows = g.rows.tolist()
+        dst_indptr = g.dst_indptr.tolist()
+        dst_flat = g.dst_flat.tolist()
+
+        # ops vectorized: PE token per op, duration-as-priority; move slots
+        # are overwritten below
+        prio: list = g.duration.tolist()
+        exec_plan: list = list(zip((g.pe % n_pes).tolist(), prio))
+        move_idx = np.nonzero(g.kinds != OP)[0].tolist()
+        n_rows = 0
+        for i in move_idx:
+            lo_, hi_ = dst_indptr[i], dst_indptr[i + 1]
+            raw_dsts = dst_flat[lo_:hi_]
+            r = rows[i]
+            # int vs tuple keys cannot collide, so single-destination moves
+            # skip the tuple allocation
+            key = (src[i], raw_dsts[0] if hi_ - lo_ == 1 else tuple(raw_dsts),
+                   r)
+            hit = move_cache.get(key)
+            if hit is None:
+                s = src[i] % n_pes
+                dsts = [d % n_pes for d in raw_dsts]
+                lat = move_latency(mode, s, dsts, r)
+                if lisa:
+                    lo = min(s, *dsts) if dsts else s
+                    hi = max(s, *dsts) if dsts else s
+                    rids = tuple(range(lo, hi + 1))
+                    stall_counts = (1,) * (hi - lo + 1)
+                else:
+                    rids = (bus, tx0 + s, *(rx0 + d for d in dsts))
+                    stall_counts = ()
+                hit = move_cache[key] = (
+                    (rids, stall_counts, lat),
+                    move_latency(mode, src[i], raw_dsts, r),
+                    r * len(dsts))
+            exec_plan[i], prio[i], n_del = hit
+            n_rows += n_del
+        n_moves = len(move_idx)
+        return Compiled(3 * n_pes + 1, exec_plan, prio,
+                        n_ops=g.n - n_moves, n_moves=n_moves, n_rows=n_rows,
+                        n_cross=0,
+                        rows_by_route={"intra": n_rows} if n_moves else {})
+
+
+# --- vectorized levelized critical path -----------------------------------------
+
+
+def critical_path(g: TaskGraph, prio_dur: Sequence[float]) -> np.ndarray:
+    """Longest path to a sink per task, swept level by level with NumPy.
+
+    Bit-identical to the legacy per-task recursion: longest path is a pure
+    (max, +) computation, and IEEE max/add are order independent here.
+    """
+    n = g.n
+    cp = np.asarray(prio_dur, dtype=np.float64).copy()
+    if n == 0:
+        return cp
+    depth = g.levels()
+    succ_indptr, succ_flat = g.successors()
+    order = np.argsort(depth, kind="stable")
+    maxd = int(depth[order[-1]])
+    if n < 8 * (maxd + 1):
+        # deep, narrow graph (serial chains): per-level vector overhead
+        # exceeds the work, so run the reverse-topological sweep in plain
+        # Python — same (max, +) recurrence, identical floats
+        cp_l = cp.tolist()
+        si = succ_indptr.tolist()
+        sf = succ_flat.tolist()
+        for i in reversed(order.tolist()):
+            s0, s1 = si[i], si[i + 1]
+            if s0 != s1:
+                m = cp_l[sf[s0]]
+                for k in range(s0 + 1, s1):
+                    v = cp_l[sf[k]]
+                    if v > m:
+                        m = v
+                cp_l[i] += m
+        return np.asarray(cp_l, dtype=np.float64)
+    # the gather plan per level is pure structure — compute once per graph
+    # (shared via _derived across every mode/materialization of a sweep)
+    plan = g._derived.get("cp_plan")
+    if plan is None:
+        bounds = np.searchsorted(depth[order], np.arange(maxd + 2))
+        plan = []
+        for d in range(maxd, -1, -1):
+            sel = order[bounds[d]:bounds[d + 1]]
+            starts = succ_indptr[sel]
+            counts = succ_indptr[sel + 1] - starts
+            total = int(counts.sum())
+            if total == 0:
+                continue
+            seg_starts = np.cumsum(counts) - counts
+            within = np.arange(total, dtype=np.int64) \
+                - np.repeat(seg_starts, counts)
+            gather = succ_flat[np.repeat(starts, counts) + within]
+            nz = counts > 0
+            plan.append((sel, gather, seg_starts[nz], nz))
+        g._derived["cp_plan"] = plan
+    for sel, gather, red_starts, nz in plan:
+        m = np.zeros(len(sel), dtype=np.float64)
+        m[nz] = np.maximum.reduceat(cp[gather], red_starts)
+        cp[sel] += m
+    return cp
+
+
+# --- the event loop -------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Raw schedule outcome; shims wrap it into their public result types."""
+
+    makespan_ns: float
+    op_busy_ns: float
+    move_busy_ns: float
+    stall_ns: float
+    n_ops: int
+    n_moves: int
+    n_rows_moved: int
+    n_cross_moves: int
+    energy_j: float                 # cross-segment (drain+transit) energy
+    rows_by_route: dict
+    bus_busy_ns: dict
+    finish_times: dict              # uid -> finish ns
+
+
+def run(g: TaskGraph, model: ResourceModel, *,
+        validate: bool = True) -> EngineStats:
+    """List-schedule ``g`` on ``model``'s resource tokens."""
+    if validate:
+        g.validate()
+    comp = model.compile(g)
+    cp = critical_path(g, comp.prio_dur)
+
+    n = g.n
+    static = g._derived.get("loop_static")
+    if static is None:
+        succ_indptr, succ_flat = g.successors()
+        si = succ_indptr.tolist()
+        sf = succ_flat.tolist()
+        succ = [sf[si[i]:si[i + 1]] for i in range(n)]
+        uids = g.uids.tolist()
+        base_indeg = np.diff(g.dep_indptr).tolist()
+        sources = [i for i in range(n) if not base_indeg[i]]
+        # positional uids admit 3-element heap entries (uid == position)
+        pos_uids = uids == list(range(n))
+        static = g._derived["loop_static"] = (succ, uids, base_indeg,
+                                              sources, pos_uids)
+    succ, uids, base_indeg, sources, pos_uids = static
+    neg_cp = (-cp).tolist()
+    indeg = base_indeg.copy()
+    exec_plan = comp.exec_plan
+
+    free = [0.0] * comp.n_resources
+    finish = [0.0] * n
+    # dependency-ready time per task, maintained incrementally as
+    # predecessors finish (identical floats: IEEE max is order independent)
+    ready_t = [0.0] * n
+    op_busy = move_busy = stall = energy = 0.0
+    bus_busy = {"bank_group": 0.0, "channel": 0.0}
+
+    heappush, heappop = heapq.heappush, heapq.heappop
+    heap: list = []
+    for i in sources:
+        heappush(heap, (neg_cp[i], 0.0, i) if pos_uids
+                 else (neg_cp[i], 0.0, uids[i], i))
+
+    while heap:
+        i = heappop(heap)[-1]
+        dep_t = ready_t[i]
+        p = exec_plan[i]
+        lp = len(p)
+        if lp == 2:
+            rid, du = p
+            t0 = free[rid]
+            start = dep_t if dep_t > t0 else t0
+            end = start + du
+            free[rid] = end
+            op_busy += du
+        elif lp == 3:
+            # single-segment intra-bank move (the common case, pre-flattened)
+            rids, stall_counts, du = p
+            s = dep_t
+            for r in rids:
+                f = free[r]
+                if f > s:
+                    s = f
+            end = s + du
+            for r in rids:
+                free[r] = end
+            if stall_counts:
+                span = end - s
+                for cnt in stall_counts:
+                    sub = 0.0
+                    for _ in range(cnt):
+                        sub += span
+                    stall += sub
+            move_busy += du
+        else:
+            end = dep_t
+            for seg in p[0]:
+                if seg[0] == CIRCUIT:
+                    _, rids, stall_counts, du, busy_keys, ej = seg
+                    s = dep_t
+                    for r in rids:
+                        f = free[r]
+                        if f > s:
+                            s = f
+                    e = s + du
+                    for r in rids:
+                        free[r] = e
+                    if stall_counts:
+                        span = e - s
+                        for cnt in stall_counts:
+                            sub = 0.0
+                            for _ in range(cnt):
+                                sub += span
+                            stall += sub
+                    if busy_keys:
+                        span = e - s
+                        for k in busy_keys:
+                            bus_busy[k] += span
+                    move_busy += du
+                else:
+                    (_, leg1, leg2, leg3, drain, transit, fill, drain1,
+                     transit1, fill1, mb, busy_keys, ej) = seg
+                    s1 = dep_t
+                    for r in leg1:
+                        f = free[r]
+                        if f > s1:
+                            s1 = f
+                    e1 = s1 + drain
+                    for r in leg1:
+                        free[r] = e1
+                    s2 = s1 + drain1
+                    for r in leg2:
+                        f = free[r]
+                        if f > s2:
+                            s2 = f
+                    e2 = s2 + transit
+                    for r in leg2:
+                        free[r] = e2
+                    for k in busy_keys:
+                        bus_busy[k] += transit
+                    s3 = s2 + transit1
+                    for r in leg3:
+                        f = free[r]
+                        if f > s3:
+                            s3 = f
+                    e = s3 + fill
+                    alt = e2 + fill1
+                    if alt > e:
+                        e = alt
+                    for r in leg3:
+                        free[r] = e
+                    move_busy += mb
+                if ej:
+                    energy += ej
+                if e > end:
+                    end = e
+
+        finish[i] = end
+        if pos_uids:
+            for s_ in succ[i]:
+                if ready_t[s_] < end:
+                    ready_t[s_] = end
+                nd = indeg[s_] - 1
+                indeg[s_] = nd
+                if not nd:
+                    heappush(heap, (neg_cp[s_], end, s_))
+        else:
+            for s_ in succ[i]:
+                if ready_t[s_] < end:
+                    ready_t[s_] = end
+                nd = indeg[s_] - 1
+                indeg[s_] = nd
+                if not nd:
+                    heappush(heap, (neg_cp[s_], end, uids[s_], s_))
+
+    if any(indeg):
+        raise RuntimeError("engine deadlock: not all tasks executed "
+                           "(graph validation should have caught this)")
+    makespan = max(finish) if n else 0.0
+    return EngineStats(
+        makespan_ns=makespan, op_busy_ns=op_busy, move_busy_ns=move_busy,
+        stall_ns=stall, n_ops=comp.n_ops, n_moves=comp.n_moves,
+        n_rows_moved=comp.n_rows, n_cross_moves=comp.n_cross,
+        energy_j=energy, rows_by_route=comp.rows_by_route,
+        bus_busy_ns=bus_busy,
+        finish_times=dict(zip(uids, finish)))

@@ -1,0 +1,417 @@
+"""Structure-of-arrays TaskGraph IR for the PIM simulator.
+
+Every scheduler layer of this repo — the single-bank engine, the device
+engine, the batch sweep runner — consumes one intermediate representation: a
+:class:`TaskGraph` that stores the dataflow graph as flat NumPy arrays
+(structure of arrays) instead of per-task Python objects.
+
+Layout (``n`` tasks, CSR adjacency):
+
+============== ======== =======================================================
+field          dtype    meaning
+============== ======== =======================================================
+uids           int64[n]  caller-facing task ids (unique, arbitrary ints)
+kinds          int8[n]   ``OP`` (compute) or ``MOVE`` (row transfer)
+dep_indptr     int64[n+1] CSR row pointer into ``dep_pos``
+dep_pos        int64[nnz] dependency *positions* (row indices, not uids)
+duration       f64[n]    op latency in ns (0 for moves and unmaterialized ops)
+op_class       int16[n]  index into :data:`OP_CLASSES`, or ``-1`` = explicit
+pe             int64[n]  op placement (``NONE_SENTINEL`` when absent)
+src            int64[n]  move source PE (``NONE_SENTINEL`` when absent)
+dst_indptr     int64[n+1] CSR row pointer into ``dst_flat``
+dst_flat       int64[m]  move destinations (broadcast = several per move)
+dst_is_tuple   bool[n]   original ``Task.dst`` was a tuple (API round-trip)
+rows           int64[n]  8KB row hand-offs per move
+tags           tuple[str] per-task debug tags (optional)
+============== ======== =======================================================
+
+``op_class`` is what makes a graph *mode independent*: app builders record
+"this op is a 32-bit add/mul" instead of baking in the latency, and
+:func:`materialize` fills ``duration`` for a concrete interconnect.  One
+cached structural graph therefore serves every (interconnect, policy,
+geometry) configuration of a sweep.
+
+:func:`validate` rejects malformed graphs up front — duplicate uids,
+out-of-range kinds, dangling dependencies, and cycles all raise
+``ValueError`` naming the offending uids (the legacy schedulers would
+silently deadlock or die with a bare ``KeyError``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import pluto
+from repro.core.pluto import Interconnect
+
+#: task kinds
+OP, MOVE = 0, 1
+KIND_NAMES = ("op", "move")
+
+#: symbolic op classes a builder may emit instead of explicit durations;
+#: materialized per interconnect via :func:`pluto.op32_latency_ns`
+OP_CLASSES = ("add", "mul")
+_OP_CLASS_INDEX = {name: i for i, name in enumerate(OP_CLASSES)}
+
+#: array encoding of ``None`` for pe/src fields
+NONE_SENTINEL = np.iinfo(np.int64).min
+
+#: cap on how many uids an error message spells out
+_MAX_ERR_UIDS = 20
+
+
+@dataclasses.dataclass
+class TaskGraph:
+    """Structure-of-arrays dataflow graph (see module docstring)."""
+
+    uids: np.ndarray
+    kinds: np.ndarray
+    dep_indptr: np.ndarray
+    dep_pos: np.ndarray
+    duration: np.ndarray
+    op_class: np.ndarray
+    pe: np.ndarray
+    src: np.ndarray
+    dst_indptr: np.ndarray
+    dst_flat: np.ndarray
+    dst_is_tuple: np.ndarray
+    rows: np.ndarray
+    tags: tuple[str, ...] | None = None
+    #: memoized derived structure (successor CSR, levels, validation flag,
+    #: engine loop statics).  A *shared mutable dict*: ``dataclasses.replace``
+    #: copies the reference, so every materialized/placed copy of one
+    #: structural graph — same deps, different durations or placements —
+    #: pays for its derived structure exactly once across a whole sweep.
+    _derived: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    @property
+    def n(self) -> int:
+        return len(self.uids)
+
+    # --- per-task views ---------------------------------------------------------
+
+    def deps_of(self, i: int) -> np.ndarray:
+        return self.dep_pos[self.dep_indptr[i]:self.dep_indptr[i + 1]]
+
+    def dsts_of(self, i: int) -> np.ndarray:
+        return self.dst_flat[self.dst_indptr[i]:self.dst_indptr[i + 1]]
+
+    # --- derived structure ------------------------------------------------------
+
+    def successors(self) -> tuple[np.ndarray, np.ndarray]:
+        """CSR successor adjacency ``(succ_indptr, succ_flat)``.
+
+        ``succ_flat[succ_indptr[i]:succ_indptr[i+1]]`` lists the positions of
+        tasks that depend on task ``i`` (duplicates preserved, mirroring the
+        dependency multiset).
+        """
+        cached = self._derived.get("succ")
+        if cached is not None:
+            return cached
+        n = self.n
+        counts = np.bincount(self.dep_pos, minlength=n) if len(self.dep_pos) \
+            else np.zeros(n, dtype=np.int64)
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        if len(self.dep_pos):
+            owners = np.repeat(np.arange(n, dtype=np.int64),
+                               np.diff(self.dep_indptr))
+            order = np.argsort(self.dep_pos, kind="stable")
+            flat = owners[order]
+        else:
+            flat = np.zeros(0, dtype=np.int64)
+        self._derived["succ"] = (indptr, flat)
+        return self._derived["succ"]
+
+    def levels(self) -> np.ndarray:
+        """Topological depth per task (0 = source), via vectorized Kahn.
+
+        Tasks left unassigned by the sweep sit on a cycle; they keep depth
+        ``-1`` and :func:`validate` turns them into an error.
+        """
+        cached = self._derived.get("levels")
+        if cached is not None:
+            return cached
+        n = self.n
+        depth = np.full(n, -1, dtype=np.int64)
+        if n == 0:
+            self._derived["levels"] = depth
+            return depth
+        indeg = np.diff(self.dep_indptr).copy()
+        succ_indptr, succ_flat = self.successors()
+        frontier = np.nonzero(indeg == 0)[0]
+        level = 0
+        while len(frontier):
+            depth[frontier] = level
+            # gather all successor slots of the frontier in one shot
+            starts = succ_indptr[frontier]
+            counts = succ_indptr[frontier + 1] - starts
+            total = int(counts.sum())
+            if total == 0:
+                break
+            seg_starts = np.cumsum(counts) - counts
+            within = np.arange(total, dtype=np.int64) \
+                - np.repeat(seg_starts, counts)
+            hits = succ_flat[np.repeat(starts, counts) + within]
+            dec = np.bincount(hits, minlength=n)
+            indeg -= dec
+            frontier = np.nonzero((indeg == 0) & (dec > 0))[0]
+            level += 1
+        self._derived["levels"] = depth
+        return depth
+
+    def validate(self) -> None:
+        """Raise ``ValueError`` naming offending uids for malformed graphs.
+
+        A clean pass is memoized (and survives ``dataclasses.replace``
+        copies, whose structure is unchanged), so repeated scheduling of one
+        graph validates once.
+        """
+        n = self.n
+        if n == 0 or self._derived.get("validated"):
+            return
+        uniq, counts = np.unique(self.uids, return_counts=True)
+        if len(uniq) != n:
+            raise ValueError(
+                "duplicate task uids: "
+                f"{_fmt_uids(uniq[counts > 1])}")
+        bad_kind = np.nonzero((self.kinds != OP) & (self.kinds != MOVE))[0]
+        if len(bad_kind):
+            raise ValueError(
+                f"unknown task kind for uids {_fmt_uids(self.uids[bad_kind])}")
+        no_pe = (self.kinds == OP) & (self.pe == NONE_SENTINEL)
+        if no_pe.any():
+            raise ValueError(
+                f"ops without a pe: uids {_fmt_uids(self.uids[no_pe])}")
+        moves = self.kinds == MOVE
+        no_src = moves & (self.src == NONE_SENTINEL)
+        if no_src.any():
+            raise ValueError(
+                f"moves without a src: uids {_fmt_uids(self.uids[no_src])}")
+        no_dst = moves & (np.diff(self.dst_indptr) == 0)
+        if no_dst.any():
+            raise ValueError(
+                f"moves without destinations: uids "
+                f"{_fmt_uids(self.uids[no_dst])}")
+        if len(self.dep_pos):
+            oob = (self.dep_pos < 0) | (self.dep_pos >= n)
+            if oob.any():
+                owners = np.repeat(np.arange(n), np.diff(self.dep_indptr))
+                raise ValueError(
+                    "dangling deps: tasks "
+                    f"{_fmt_uids(self.uids[np.unique(owners[oob])])} depend "
+                    "on uids that are not in the graph")
+        depth = self.levels()
+        cyc = np.nonzero(depth < 0)[0]
+        if len(cyc):
+            raise ValueError(
+                f"task graph has a cycle through uids "
+                f"{_fmt_uids(self.uids[cyc])}")
+        self._derived["validated"] = True
+
+
+def freeze(g: TaskGraph) -> TaskGraph:
+    """Mark every array of ``g`` read-only and return it.
+
+    Built/cached graphs are shared process-wide (``lru_cache`` in the app
+    builders and the partitioner) and across ``dataclasses.replace`` copies;
+    freezing turns an accidental in-place mutation — which would silently
+    poison every later build of the same shape — into an immediate
+    ``ValueError: assignment destination is read-only``.
+    """
+    for f in ("uids", "kinds", "dep_indptr", "dep_pos", "duration",
+              "op_class", "pe", "src", "dst_indptr", "dst_flat",
+              "dst_is_tuple", "rows"):
+        getattr(g, f).setflags(write=False)
+    return g
+
+
+def _fmt_uids(uids: Iterable[int]) -> str:
+    uids = sorted(int(u) for u in uids)
+    shown = ", ".join(str(u) for u in uids[:_MAX_ERR_UIDS])
+    extra = len(uids) - _MAX_ERR_UIDS
+    return f"[{shown}{f', … +{extra} more' if extra > 0 else ''}]"
+
+
+# --- builders -------------------------------------------------------------------
+
+
+class GraphBuilder:
+    """Append-only builder producing a :class:`TaskGraph` directly.
+
+    Used by the app builders in :mod:`repro.core.taskgraph`; ops may carry a
+    symbolic ``op_class`` ("add"/"mul") instead of a concrete duration, which
+    keeps the built structure interconnect independent.
+    """
+
+    def __init__(self) -> None:
+        self._kinds: list[int] = []
+        self._dep_indptr: list[int] = [0]
+        self._dep_pos: list[int] = []
+        self._duration: list[float] = []
+        self._op_class: list[int] = []
+        self._pe: list[int] = []
+        self._src: list[int] = []
+        self._dst_indptr: list[int] = [0]
+        self._dst_flat: list[int] = []
+        self._dst_is_tuple: list[bool] = []
+        self._rows: list[int] = []
+        self._tags: list[str] = []
+
+    def __len__(self) -> int:
+        return len(self._kinds)
+
+    def op(self, pe: int, deps: Sequence[int] = (), *,
+           op_class: str | None = None, duration: float = 0.0,
+           tag: str = "") -> int:
+        uid = len(self._kinds)
+        self._kinds.append(OP)
+        self._dep_pos.extend(deps)
+        self._dep_indptr.append(len(self._dep_pos))
+        self._tags.append(tag)
+        self._duration.append(duration)
+        self._op_class.append(_OP_CLASS_INDEX[op_class]
+                              if op_class is not None else -1)
+        self._pe.append(pe)
+        self._src.append(NONE_SENTINEL)
+        self._dst_indptr.append(len(self._dst_flat))
+        self._dst_is_tuple.append(False)
+        self._rows.append(1)
+        return uid
+
+    def move(self, src: int, dst: int | Sequence[int],
+             deps: Sequence[int] = (), *, rows: int = 1, tag: str = "") -> int:
+        uid = len(self._kinds)
+        self._kinds.append(MOVE)
+        self._dep_pos.extend(deps)
+        self._dep_indptr.append(len(self._dep_pos))
+        self._tags.append(tag)
+        self._duration.append(0.0)
+        self._op_class.append(-1)
+        self._pe.append(NONE_SENTINEL)
+        self._src.append(src)
+        if isinstance(dst, (tuple, list)):
+            self._dst_flat.extend(dst)
+            self._dst_is_tuple.append(True)
+        else:
+            self._dst_flat.append(dst)
+            self._dst_is_tuple.append(False)
+        self._dst_indptr.append(len(self._dst_flat))
+        self._rows.append(rows)
+        return uid
+
+    def build(self) -> TaskGraph:
+        n = len(self._kinds)
+        return freeze(TaskGraph(
+            uids=np.arange(n, dtype=np.int64),
+            kinds=np.asarray(self._kinds, dtype=np.int8),
+            dep_indptr=np.asarray(self._dep_indptr, dtype=np.int64),
+            dep_pos=np.asarray(self._dep_pos, dtype=np.int64),
+            duration=np.asarray(self._duration, dtype=np.float64),
+            op_class=np.asarray(self._op_class, dtype=np.int16),
+            pe=np.asarray(self._pe, dtype=np.int64),
+            src=np.asarray(self._src, dtype=np.int64),
+            dst_indptr=np.asarray(self._dst_indptr, dtype=np.int64),
+            dst_flat=np.asarray(self._dst_flat, dtype=np.int64),
+            dst_is_tuple=np.asarray(self._dst_is_tuple, dtype=bool),
+            rows=np.asarray(self._rows, dtype=np.int64),
+            tags=tuple(self._tags),
+        ))
+
+
+def from_tasks(tasks: Iterable) -> TaskGraph:
+    """Build a TaskGraph from legacy ``scheduler.Task`` objects.
+
+    Dependencies referencing uids absent from the graph raise ``ValueError``
+    naming the offenders (the legacy engine died with a ``KeyError`` deep in
+    its event loop instead).
+    """
+    tasks = list(tasks)
+    n = len(tasks)
+    uid_to_pos = {t.uid: i for i, t in enumerate(tasks)}
+    if len(uid_to_pos) != n:
+        seen: set[int] = set()
+        dups: set[int] = set()
+        for t in tasks:
+            (dups if t.uid in seen else seen).add(t.uid)
+        raise ValueError(f"duplicate task uids: {_fmt_uids(dups)}")
+
+    b = GraphBuilder()
+    dangling: dict[int, list[int]] = {}
+    for i, t in enumerate(tasks):
+        deps = []
+        for d in t.deps:
+            if d not in uid_to_pos:
+                dangling.setdefault(t.uid, []).append(d)
+            else:
+                deps.append(uid_to_pos[d])
+        if t.kind == "op":
+            b.op(t.pe if t.pe is not None else NONE_SENTINEL, deps,
+                 duration=t.duration, tag=t.tag)
+        elif t.kind == "move":
+            b.move(t.src if t.src is not None else NONE_SENTINEL,
+                   tuple(t.dst) if isinstance(t.dst, tuple) else t.dst,
+                   deps, rows=t.rows, tag=t.tag)
+        else:
+            raise ValueError(f"unknown task kind {t.kind!r} (uid {t.uid})")
+    if dangling:
+        detail = "; ".join(
+            f"task {u} -> missing {_fmt_uids(ds)}"
+            for u, ds in sorted(dangling.items())[:_MAX_ERR_UIDS])
+        raise ValueError(f"dangling deps: {detail}")
+    g = b.build()
+    g.uids = np.asarray([t.uid for t in tasks], dtype=np.int64)
+    return freeze(g)
+
+
+def to_tasks(g: TaskGraph) -> list:
+    """Convert back to legacy ``scheduler.Task`` objects (API round-trip)."""
+    from repro.core.scheduler import Task  # local import: scheduler imports ir
+
+    dep_pos = g.dep_pos.tolist()
+    dst_flat = g.dst_flat.tolist()
+    dep_indptr = g.dep_indptr.tolist()
+    dst_indptr = g.dst_indptr.tolist()
+    uids = g.uids.tolist()
+    pes = g.pe.tolist()
+    srcs = g.src.tolist()
+    tags = g.tags if g.tags is not None else ("",) * g.n
+    out = []
+    for i in range(g.n):
+        deps = tuple(uids[p] for p in dep_pos[dep_indptr[i]:dep_indptr[i + 1]])
+        if g.kinds[i] == OP:
+            pe = pes[i]
+            out.append(Task(uids[i], "op", deps,
+                            pe=None if pe == NONE_SENTINEL else pe,
+                            duration=float(g.duration[i]), tag=tags[i]))
+        else:
+            dst = dst_flat[dst_indptr[i]:dst_indptr[i + 1]]
+            src = srcs[i]
+            out.append(Task(
+                uids[i], "move", deps,
+                src=None if src == NONE_SENTINEL else src,
+                dst=tuple(dst) if g.dst_is_tuple[i] else dst[0],
+                rows=int(g.rows[i]), tag=tags[i]))
+    return out
+
+
+def materialize(g: TaskGraph, mode: Interconnect) -> TaskGraph:
+    """Fill symbolic op durations for a concrete interconnect.
+
+    Returns a shallow copy sharing every structural array with ``g``; only
+    ``duration`` is fresh.  Ops with explicit durations pass through
+    unchanged, so graphs mixing both styles materialize correctly.
+    """
+    if not (g.op_class >= 0).any():
+        return g
+    table = np.asarray(
+        [pluto.op32_latency_ns(name, mode) for name in OP_CLASSES],
+        dtype=np.float64)
+    duration = g.duration.copy()
+    sym = g.op_class >= 0
+    duration[sym] = table[g.op_class[sym]]
+    return dataclasses.replace(g, duration=duration)

@@ -1,4 +1,4 @@
-"""Discrete-event scheduler for in-DRAM PIM task graphs.
+"""Single-bank PIM scheduling: a thin shim over the resource-token engine.
 
 Models a DRAM bank as a set of subarray processing elements (PEs) plus an
 interconnect, and schedules a dependency graph of compute ops and row moves.
@@ -17,19 +17,23 @@ semantics — exactly the paper's point:
   (2 per subarray: 1 tx + 1 rx) bound the concurrency, and broadcasts reach
   up to 4 destinations in one bus transaction.
 
-The engine is a classic list scheduler over a heap of ready tasks with
-critical-path priority.  It reports makespan, per-resource busy time, stall
-time, and move/op counts (for the energy model).
+Those semantics live in :class:`repro.core.engine.BankModel` as declarative
+resource-token claims; this module only keeps the public single-bank API —
+the legacy :class:`Task` type, the :class:`ScheduleResult` report, and the
+``schedule``/``compare``/``improvement`` entry points.  ``schedule`` accepts
+either an iterable of :class:`Task` or a pre-built
+:class:`~repro.core.ir.TaskGraph` (the no-conversion fast path the batch
+runner uses).  Results are bit-for-bit identical to the pre-engine
+implementation (kept in :mod:`repro.core.reference`, asserted by
+``tests/test_golden_equivalence.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import math
-from typing import Iterable, Sequence
+from typing import Iterable, Union
 
-from repro.core import copy_models, pluto
+from repro.core import engine, ir, pluto
 from repro.core.pluto import Interconnect
 
 
@@ -77,155 +81,47 @@ class ScheduleResult:
         return self.n_ops * pluto.E_LUT_PASS
 
 
-class Bank:
-    """Resource state for one DRAM bank."""
-
-    def __init__(self, n_pes: int = 16):
-        self.n_pes = n_pes
-        self.pe_free = [0.0] * n_pes      # earliest free time per subarray PE
-        self.bus_free = 0.0               # Shared-PIM BK-bus
-        self.tx_free = [0.0] * n_pes      # shared-row transmit token
-        self.rx_free = [0.0] * n_pes      # shared-row receive token
-
-
-def _move_latency(mode: Interconnect, src: int, dst: Sequence[int],
-                  rows: int) -> float:
-    if mode is Interconnect.LISA:
-        # LISA has no broadcast: one serial copy per destination, each with
-        # distance-dependent RBM chains; `rows` row hand-offs each.
-        total = 0.0
-        for d in dst:
-            dist = max(1, abs(d - src))
-            total += rows * copy_models.lisa_copy(distance=dist).latency_ns
-        return total
-    # Shared-PIM: distance independent; broadcast amortizes tRAS across <=4
-    # destinations in one bus transaction.
-    if len(dst) == 1:
-        return rows * copy_models.sharedpim_copy().latency_ns
-    lat = 0.0
-    remaining = list(dst)
-    while remaining:
-        grp = remaining[:4]
-        remaining = remaining[4:]
-        lat += rows * copy_models.sharedpim_broadcast(dests=tuple(grp)).latency_ns
-    return lat
-
-
-def _critical_path(tasks: dict[int, Task], succ: dict[int, list[int]],
-                   mode: Interconnect) -> dict[int, float]:
-    """Longest path to a sink, used as list-scheduling priority."""
-    order = _topo_order(tasks, succ)
-    cp: dict[int, float] = {}
-    for uid in reversed(order):
-        t = tasks[uid]
-        dur = t.duration if t.kind == "op" else _move_latency(
-            mode, t.src, _dsts(t), t.rows)
-        cp[uid] = dur + max((cp[s] for s in succ.get(uid, ())), default=0.0)
-    return cp
-
-
-def _topo_order(tasks: dict[int, Task], succ: dict[int, list[int]]) -> list[int]:
-    indeg = {uid: len(t.deps) for uid, t in tasks.items()}
-    stack = [uid for uid, d in indeg.items() if d == 0]
-    order: list[int] = []
-    while stack:
-        uid = stack.pop()
-        order.append(uid)
-        for s in succ.get(uid, ()):
-            indeg[s] -= 1
-            if indeg[s] == 0:
-                stack.append(s)
-    if len(order) != len(tasks):
-        raise ValueError("task graph has a cycle")
-    return order
-
-
 def _dsts(t: Task) -> tuple[int, ...]:
     return t.dst if isinstance(t.dst, tuple) else (t.dst,)
 
 
-def schedule(tasks_in: Iterable[Task], mode: Interconnect,
+#: legacy alias — the canonical model now lives in :mod:`repro.core.engine`
+_move_latency = engine.move_latency
+
+Graphish = Union[Iterable[Task], ir.TaskGraph]
+
+
+def as_graph(tasks: Graphish) -> ir.TaskGraph:
+    """Coerce a legacy task list (or an IR graph, unchanged) to the IR."""
+    if isinstance(tasks, ir.TaskGraph):
+        return tasks
+    return ir.from_tasks(tasks)
+
+
+def schedule(tasks_in: Graphish, mode: Interconnect,
              n_pes: int = 16) -> ScheduleResult:
-    """List-schedule a task graph on one bank under the given interconnect."""
-    tasks = {t.uid: t for t in tasks_in}
-    succ: dict[int, list[int]] = {}
-    for t in tasks.values():
-        for d in t.deps:
-            succ.setdefault(d, []).append(t.uid)
-    cp = _critical_path(tasks, succ, mode)
+    """List-schedule a task graph on one bank under the given interconnect.
 
-    bank = Bank(n_pes)
-    finish: dict[int, float] = {}
-    indeg = {uid: len(t.deps) for uid, t in tasks.items()}
-    # ready heap: (-critical_path, ready_time, uid)
-    ready: list[tuple[float, float, int]] = []
-    for uid, d in indeg.items():
-        if d == 0:
-            heapq.heappush(ready, (-cp[uid], 0.0, uid))
-
-    op_busy = move_busy = stall = 0.0
-    n_ops = n_moves = n_rows = 0
-
-    while ready:
-        _, ready_t, uid = heapq.heappop(ready)
-        t = tasks[uid]
-        dep_t = max((finish[d] for d in t.deps), default=0.0)
-        if t.kind == "op":
-            pe = t.pe % bank.n_pes
-            start = max(dep_t, bank.pe_free[pe])
-            end = start + t.duration
-            bank.pe_free[pe] = end
-            op_busy += t.duration
-            n_ops += 1
-        elif t.kind == "move":
-            dsts = _dsts(t)
-            src = t.src % bank.n_pes
-            dsts = tuple(d % bank.n_pes for d in dsts)
-            dur = _move_latency(mode, src, dsts, t.rows)
-            if mode is Interconnect.LISA:
-                # RBM stalls every subarray in the span for the whole move.
-                lo = min((src, *dsts))
-                hi = max((src, *dsts))
-                start = max(dep_t, *(bank.pe_free[p] for p in range(lo, hi + 1)))
-                end = start + dur
-                for p in range(lo, hi + 1):
-                    stall += end - max(start, bank.pe_free[p])
-                    bank.pe_free[p] = end
-            else:
-                # Shared-PIM: bus + shared-row tokens only; PEs keep running.
-                start = max(dep_t, bank.bus_free, bank.tx_free[src],
-                            *(bank.rx_free[d] for d in dsts))
-                end = start + dur
-                bank.bus_free = end
-                bank.tx_free[src] = end
-                for d in dsts:
-                    bank.rx_free[d] = end
-            move_busy += dur
-            n_moves += 1
-            n_rows += t.rows * len(dsts)
-        else:
-            raise ValueError(f"unknown task kind {t.kind!r}")
-
-        finish[uid] = end
-        for s in succ.get(uid, ()):
-            indeg[s] -= 1
-            if indeg[s] == 0:
-                heapq.heappush(ready, (-cp[s], end, s))
-
-    if len(finish) != len(tasks):
-        raise ValueError("scheduler deadlock: not all tasks executed")
-    makespan = max(finish.values(), default=0.0)
-    return ScheduleResult(mode, makespan, op_busy, move_busy, stall,
-                          n_ops, n_moves, n_rows, finish)
+    Structural graphs with symbolic op classes are materialized for ``mode``
+    here (idempotent for already-materialized graphs), so passing
+    ``taskgraph.structural(...)`` directly cannot silently schedule
+    zero-duration ops.
+    """
+    g = ir.materialize(as_graph(tasks_in), mode)
+    stats = engine.run(g, engine.BankModel(mode, n_pes))
+    return ScheduleResult(
+        mode, stats.makespan_ns, stats.op_busy_ns, stats.move_busy_ns,
+        stats.stall_ns, stats.n_ops, stats.n_moves, stats.n_rows_moved,
+        stats.finish_times)
 
 
-def compare(tasks: Iterable[Task], n_pes: int = 16
+def compare(tasks: Graphish, n_pes: int = 16
             ) -> dict[str, ScheduleResult]:
     """Schedule the same graph under both interconnects."""
-    tasks = list(tasks)
+    g = as_graph(tasks)
     return {
-        "lisa": schedule(tasks, Interconnect.LISA, n_pes),
-        "shared_pim": schedule(tasks, Interconnect.SHARED_PIM, n_pes),
+        "lisa": schedule(g, Interconnect.LISA, n_pes),
+        "shared_pim": schedule(g, Interconnect.SHARED_PIM, n_pes),
     }
 
 

@@ -29,15 +29,25 @@ Graph shapes (mapping mirrors the paper's Fig 4 examples):
   the next node's adjacency segment (4 rows) + distance-vector slices
   (2 rows) are prefetched from the storage subarray while the current update
   runs (double-buffered visit PEs).  BFS == DFS in the worst case (Sec IV-D).
+
+Graph **structure** is interconnect independent — only op durations change
+with the mode — so each builder constructs a structural
+:class:`~repro.core.ir.TaskGraph` once per problem shape (memoized with
+``functools.lru_cache``) with symbolic "add"/"mul" op classes, and
+:func:`build_ir` materializes durations for a concrete mode in one
+vectorized lookup.  The legacy ``list[Task]`` entry points are preserved as
+converting wrappers.
 """
 
 from __future__ import annotations
 
+import functools
+import inspect
 import math
 
-from repro.core import pluto
+from repro.core import ir
+from repro.core.ir import TaskGraph
 from repro.core.pluto import Interconnect
-from repro.core.scheduler import Task
 
 #: row hand-offs to move one 32-bit row-vector between subarrays
 SLICES_32 = 8
@@ -62,21 +72,15 @@ def default_out_slice(n_pes: int) -> int:
     return 2 * max(1, n_pes // GROUP_PES)
 
 
-def _op32(op: str, mode: Interconnect) -> float:
-    # the 32-bit composite op is itself faster under Shared-PIM (Fig 7)
-    return pluto.op32_latency_ns(op, mode)
-
-
 class _Builder:
+    """Structural builder: ops carry symbolic classes, not latencies."""
+
     def __init__(self, n_pes: int) -> None:
-        self.tasks: list[Task] = []
+        self.b = ir.GraphBuilder()
         self.n_pes = n_pes
 
-    def op(self, pe: int, dur: float, deps=(), tag="") -> int:
-        uid = len(self.tasks)
-        self.tasks.append(Task(uid, "op", tuple(deps), pe=pe % self.n_pes,
-                               duration=dur, tag=tag))
-        return uid
+    def op(self, pe: int, cls: str, deps=(), tag="") -> int:
+        return self.b.op(pe % self.n_pes, deps, op_class=cls, tag=tag)
 
     def move(self, src: int, dst, deps=(), rows=None, tag="") -> int | None:
         """Emit a move; returns None (no-op) if src == dst."""
@@ -86,26 +90,19 @@ class _Builder:
             else dst % self.n_pes
         if dst == src:
             return None
-        uid = len(self.tasks)
-        self.tasks.append(Task(uid, "move", tuple(deps), src=src, dst=dst,
-                               rows=rows, tag=tag))
-        return uid
+        return self.b.move(src, dst, deps, rows=rows, tag=tag)
+
+    def build(self) -> TaskGraph:
+        return self.b.build()
 
 
 def _dep(*uids) -> tuple[int, ...]:
     return tuple(u for u in uids if u is not None)
 
 
-def matmul(n: int = 200, n_pes: int = 16,
-           mode: Interconnect = Interconnect.LISA,
-           out_rows: int | None = None) -> list[Task]:
-    """Row-vectorized n x n x n matrix multiply on one bank (Fig 4(b) map).
-
-    ``out_rows`` limits how many output rows are simulated (the schedule is
-    identical per row, so the relative makespan is insensitive to it).
-    """
+@functools.lru_cache(maxsize=None)
+def _matmul_struct(n: int, n_pes: int, out_rows: int | None) -> TaskGraph:
     b = _Builder(n_pes)
-    t_mul, t_add = _op32("mul", mode), _op32("add", mode)
     n_groups = max(1, n_pes // GROUP_PES)
     rows = min(n, out_rows if out_rows is not None
                else default_out_slice(n_pes))
@@ -115,22 +112,15 @@ def matmul(n: int = 200, n_pes: int = 16,
         acc = None
         for k in range(n):
             src = prod_a if k % 2 == 0 else prod_b
-            u = b.op(src, t_mul, tag=f"mm.mul r{r}k{k}")
+            u = b.op(src, "mul", tag=f"mm.mul r{r}k{k}")
             mv = b.move(src, agg, deps=_dep(u), rows=SLICES_64, tag="mm.mv")
-            acc = b.op(agg, t_add, deps=_dep(mv, acc), tag="mm.acc")
-    return b.tasks
+            acc = b.op(agg, "add", deps=_dep(mv, acc), tag="mm.acc")
+    return b.build()
 
 
-def pmm(n: int = 300, n_pes: int = 16,
-        mode: Interconnect = Interconnect.LISA,
-        out_coeffs: int | None = None) -> list[Task]:
-    """Naive degree-n polynomial multiplication (paper: n=300, no NTT).
-
-    Simulates the *longest* output coefficients (k around n-1, with ~n
-    products each) — these dominate the makespan at full parallelism.
-    """
+@functools.lru_cache(maxsize=None)
+def _pmm_struct(n: int, n_pes: int, out_coeffs: int | None) -> TaskGraph:
     b = _Builder(n_pes)
-    t_mul, t_add = _op32("mul", mode), _op32("add", mode)
     n_groups = max(1, n_pes // GROUP_PES)
     n_out = min(2 * n - 1, out_coeffs if out_coeffs is not None
                 else default_out_slice(n_pes))
@@ -143,15 +133,81 @@ def pmm(n: int = 300, n_pes: int = 16,
             # products computed where the scattered a_i operands live:
             # distance 1 or 2 from the coefficient's home subarray
             pe = home + (1 if i % 3 < 2 else 2)
-            u = b.op(pe, t_mul, tag=f"pmm.mul k{k}i{i}")
+            u = b.op(pe, "mul", tag=f"pmm.mul k{k}i{i}")
             mv = b.move(pe, home, deps=_dep(u), rows=SLICES_64, tag="pmm.mv")
-            acc = b.op(home, t_add, deps=_dep(mv, acc), tag="pmm.acc")
-    return b.tasks
+            acc = b.op(home, "add", deps=_dep(mv, acc), tag="pmm.acc")
+    return b.build()
+
+
+@functools.lru_cache(maxsize=None)
+def _ntt_struct(n: int, n_pes: int, groups: int | None) -> TaskGraph:
+    b = _Builder(n_pes)
+    groups = n_pes if groups is None else groups
+    stages = int(math.log2(n))
+    prev: dict[int, tuple[int, ...]] = {g: () for g in range(groups)}
+    for s in range(stages):
+        cur: dict[int, tuple[int, ...]] = {}
+        for g in range(groups):
+            partner = g + 1 if g % 2 == 0 else g - 1
+            mul = b.op(g, "mul", deps=prev[g], tag=f"ntt.tw s{s}g{g}")
+            add = b.op(g, "add", deps=_dep(mul), tag="ntt.add")
+            sub = b.op(g, "add", deps=_dep(mul), tag="ntt.sub")
+            mv1 = b.move(g, partner, deps=_dep(add), rows=SLICES_NTT_XCHG,
+                         tag="ntt.xchg")
+            mv2 = b.move(g, partner, deps=_dep(sub), rows=SLICES_NTT_XCHG,
+                         tag="ntt.xchg")
+            cur[g] = _dep(mv1, mv2)
+        prev = cur
+    return b.build()
+
+
+@functools.lru_cache(maxsize=None)
+def _bfs_struct(n_nodes: int, n_pes: int, n_stripes: int) -> TaskGraph:
+    if n_pes % n_stripes:
+        raise ValueError(f"n_pes ({n_pes}) must be divisible by n_stripes "
+                         f"({n_stripes})")
+    stripe_w = n_pes // n_stripes
+    if stripe_w < 3:
+        raise ValueError("each stripe needs >= 3 PEs (storage + 2 visit PEs)")
+    b = _Builder(n_pes)
+    prev_upd: int | None = None
+    prev_mv: int | None = None
+    for v in range(n_nodes):
+        store = (v % n_stripes) * stripe_w   # stripe holding node v's segment
+        proc = 1 + (v % 2)                   # double-buffered visit PEs
+        mv = b.move(store, proc, deps=_dep(prev_mv), rows=BFS_FETCH_ROWS,
+                    tag=f"bfs.fetch v{v}")
+        # compare/update modeled as a 32-bit op pass
+        upd = b.op(proc, "add", deps=_dep(mv, prev_upd), tag="bfs.update")
+        prev_mv, prev_upd = mv, upd
+    return b.build()
+
+
+def matmul(n: int = 200, n_pes: int = 16,
+           mode: Interconnect = Interconnect.LISA,
+           out_rows: int | None = None) -> list:
+    """Row-vectorized n x n x n matrix multiply on one bank (Fig 4(b) map).
+
+    ``out_rows`` limits how many output rows are simulated (the schedule is
+    identical per row, so the relative makespan is insensitive to it).
+    """
+    return build("mm", mode, n=n, n_pes=n_pes, out_rows=out_rows)
+
+
+def pmm(n: int = 300, n_pes: int = 16,
+        mode: Interconnect = Interconnect.LISA,
+        out_coeffs: int | None = None) -> list:
+    """Naive degree-n polynomial multiplication (paper: n=300, no NTT).
+
+    Simulates the *longest* output coefficients (k around n-1, with ~n
+    products each) — these dominate the makespan at full parallelism.
+    """
+    return build("pmm", mode, n=n, n_pes=n_pes, out_coeffs=out_coeffs)
 
 
 def ntt(n: int = 512, n_pes: int = 16,
         mode: Interconnect = Interconnect.LISA,
-        groups: int | None = None) -> list[Task]:
+        groups: int | None = None) -> list:
     """Iterative radix-2 constant-geometry NTT over n points.
 
     Points are row-vectorized across lanes; by default we model ``n_pes``
@@ -163,30 +219,12 @@ def ntt(n: int = 512, n_pes: int = 16,
     exchange with the adjacent partner (constant-geometry keeps partners at
     stride 1 every stage).
     """
-    b = _Builder(n_pes)
-    t_mul, t_add = _op32("mul", mode), _op32("add", mode)
-    groups = n_pes if groups is None else groups
-    stages = int(math.log2(n))
-    prev: dict[int, tuple[int, ...]] = {g: () for g in range(groups)}
-    for s in range(stages):
-        cur: dict[int, tuple[int, ...]] = {}
-        for g in range(groups):
-            partner = g + 1 if g % 2 == 0 else g - 1
-            mul = b.op(g, t_mul, deps=prev[g], tag=f"ntt.tw s{s}g{g}")
-            add = b.op(g, t_add, deps=_dep(mul), tag="ntt.add")
-            sub = b.op(g, t_add, deps=_dep(mul), tag="ntt.sub")
-            mv1 = b.move(g, partner, deps=_dep(add), rows=SLICES_NTT_XCHG,
-                         tag="ntt.xchg")
-            mv2 = b.move(g, partner, deps=_dep(sub), rows=SLICES_NTT_XCHG,
-                         tag="ntt.xchg")
-            cur[g] = _dep(mv1, mv2)
-        prev = cur
-    return b.tasks
+    return build("ntt", mode, n=n, n_pes=n_pes, groups=groups)
 
 
 def bfs(n_nodes: int = 1000, n_pes: int = 16,
         mode: Interconnect = Interconnect.LISA,
-        n_stripes: int = 1) -> list[Task]:
+        n_stripes: int = 1) -> list:
     """Worst-case BFS on a dense graph: every node links to every other.
 
     Storage subarray 0 holds the adjacency matrix; visits alternate between
@@ -202,35 +240,53 @@ def bfs(n_nodes: int = 1000, n_pes: int = 16,
     serial visit chain is unchanged, but ``(n_stripes - 1)/n_stripes`` of
     the fetches become inter-block prefetch traffic.
     """
-    if n_pes % n_stripes:
-        raise ValueError(f"n_pes ({n_pes}) must be divisible by n_stripes "
-                         f"({n_stripes})")
-    stripe_w = n_pes // n_stripes
-    if stripe_w < 3:
-        raise ValueError("each stripe needs >= 3 PEs (storage + 2 visit PEs)")
-    b = _Builder(n_pes)
-    t_upd = _op32("add", mode)   # compare/update modeled as a 32-bit op pass
-    prev_upd: int | None = None
-    prev_mv: int | None = None
-    for v in range(n_nodes):
-        store = (v % n_stripes) * stripe_w   # stripe holding node v's segment
-        proc = 1 + (v % 2)                   # double-buffered visit PEs
-        mv = b.move(store, proc, deps=_dep(prev_mv), rows=BFS_FETCH_ROWS,
-                    tag=f"bfs.fetch v{v}")
-        upd = b.op(proc, t_upd, deps=_dep(mv, prev_upd), tag="bfs.update")
-        prev_mv, prev_upd = mv, upd
-    return b.tasks
+    return build("bfs", mode, n_nodes=n_nodes, n_pes=n_pes,
+                 n_stripes=n_stripes)
 
 
 def dfs(n_nodes: int = 1000, n_pes: int = 16,
         mode: Interconnect = Interconnect.LISA,
-        n_stripes: int = 1) -> list[Task]:
+        n_stripes: int = 1) -> list:
     """Worst-case DFS == worst-case BFS on the same dense graph (Sec IV-D)."""
-    return bfs(n_nodes, n_pes, mode, n_stripes=n_stripes)
+    return build("dfs", mode, n_nodes=n_nodes, n_pes=n_pes,
+                 n_stripes=n_stripes)
 
 
 APPS = {"mm": matmul, "pmm": pmm, "ntt": ntt, "bfs": bfs, "dfs": dfs}
 
+_STRUCT_FNS = {"mm": _matmul_struct, "pmm": _pmm_struct, "ntt": _ntt_struct,
+               "bfs": _bfs_struct, "dfs": _bfs_struct}
 
-def build(app: str, mode: Interconnect, **kw) -> list[Task]:
-    return APPS[app](mode=mode, **kw)
+#: structural builders and their (keyword, default) cache signatures —
+#: derived from the public wrappers' signatures (minus ``mode``), so the
+#: problem-size defaults have exactly one source of truth
+_STRUCTS = {
+    app: (_STRUCT_FNS[app],
+          tuple((name, p.default)
+                for name, p in inspect.signature(fn).parameters.items()
+                if name != "mode"))
+    for app, fn in APPS.items()
+}
+
+
+def structural(app: str, **kw) -> TaskGraph:
+    """The memoized mode-independent graph for one problem shape."""
+    fn, sig = _STRUCTS[app]
+    kw = dict(kw)
+    # pass by keyword: a parameter-order mismatch between a wrapper and its
+    # *_struct builder becomes a TypeError instead of a silently swapped
+    # argument (all of them are int-or-None)
+    full = {name: kw.pop(name, default) for name, default in sig}
+    if kw:
+        raise TypeError(f"unknown kwargs for {app}: {sorted(kw)}")
+    return fn(**full)
+
+
+def build_ir(app: str, mode: Interconnect, **kw) -> TaskGraph:
+    """Materialized IR graph for (app, mode): the schedulers' fast path."""
+    return ir.materialize(structural(app, **kw), mode)
+
+
+def build(app: str, mode: Interconnect, **kw) -> list:
+    """Legacy entry point: the same graph as ``build_ir`` as ``Task`` objects."""
+    return ir.to_tasks(build_ir(app, mode, **kw))

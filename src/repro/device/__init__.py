@@ -6,8 +6,11 @@ package scales the question to a whole device:
 
 ``geometry``      subarray -> bank -> bank group -> channel hierarchy
 ``interconnect``  inter-bank / cross-channel transfer cost models
-``scheduler``     hierarchical list scheduler with shared-bus contention
+``resources``     DeviceModel: the hierarchy as engine resource tokens
+``scheduler``     thin shim: DeviceModel + engine -> DeviceScheduleResult
 ``partition``     placement policies that split apps across N banks
+``batch``         BatchRunner: N sweep configurations in one call
+``reference``     preserved legacy scheduler (differential tests, baselines)
 
 Quickstart::
 
@@ -22,10 +25,13 @@ Quickstart::
     print(device.improvement(res), res["shared_pim"].rows_by_route)
 """
 
+from repro.device.batch import BatchRunner, SweepConfig  # noqa: F401
 from repro.device.geometry import SINGLE_BANK, DeviceGeometry  # noqa: F401
 from repro.device.interconnect import (CrossBankPlan, plan,  # noqa: F401
                                        transit_ns_per_row)
 from repro.device.partition import (POLICIES, build_partitioned,  # noqa: F401
+                                    build_partitioned_ir,
                                     cross_traffic_rows, pe_map, place)
+from repro.device.resources import DeviceModel  # noqa: F401
 from repro.device.scheduler import (DeviceScheduleResult,  # noqa: F401
                                     compare, improvement, schedule)

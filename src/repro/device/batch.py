@@ -1,0 +1,105 @@
+"""Batch scheduling of many sweep configurations in one call.
+
+A device-scale study is a grid: (app graph x geometry x interconnect x
+placement policy x scaling).  Running it as a per-config loop rebuilds and
+re-places the same graphs over and over; :class:`BatchRunner` schedules the
+whole grid in one call and deduplicates everything that is shared:
+
+* **structural graphs** — built once per (app, problem size) via the
+  ``lru_cache`` in :mod:`repro.core.taskgraph`;
+* **placed graphs** — composed/placed once per (app, geometry, policy,
+  scaling) cell via :func:`repro.device.partition.partitioned_struct`;
+  both interconnects of a cell share the same placed structure, its
+  successor CSR and its level assignment (memoized on the graph);
+* **durations** — materialized per mode as one vectorized lookup;
+* **resource models** — one :class:`~repro.device.resources.DeviceModel`
+  (and its memoized cross-bank plan prices) per (mode, geometry).
+
+``benchmarks/sweep.py`` times this runner against the equivalent per-config
+loop over the preserved legacy engine and asserts the results are
+bit-for-bit identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+from repro.core.pluto import Interconnect
+from repro.device import partition
+from repro.device import scheduler as dev_sched
+from repro.device.geometry import DeviceGeometry
+from repro.device.resources import DeviceModel
+from repro.device.scheduler import DeviceScheduleResult
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """One cell of a sweep grid (hashable; ``kw`` holds app kwargs)."""
+
+    app: str
+    mode: Interconnect
+    geometry: DeviceGeometry
+    policy: str = "locality_first"
+    scaling: str = "strong"
+    kw: tuple = ()
+
+    @classmethod
+    def make(cls, app: str, mode: Interconnect, geometry: DeviceGeometry,
+             policy: str = "locality_first", scaling: str = "strong",
+             **kw) -> "SweepConfig":
+        return cls(app, mode, geometry, policy, scaling,
+                   tuple(sorted(kw.items())))
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.kw)
+
+
+class BatchRunner:
+    """Schedules N (graph x geometry x interconnect x policy) configs."""
+
+    def __init__(self) -> None:
+        self._models: dict = {}
+
+    def _model(self, mode: Interconnect, geom: DeviceGeometry) -> DeviceModel:
+        key = (mode, geom)
+        m = self._models.get(key)
+        if m is None:
+            m = self._models[key] = DeviceModel(mode, geom)
+        return m
+
+    def run_one(self, cfg: SweepConfig) -> DeviceScheduleResult:
+        # pass the cached structural graph; schedule() materializes the
+        # durations for cfg.mode itself (exactly once)
+        g = partition.partitioned_struct(cfg.app, cfg.geometry,
+                                         policy=cfg.policy,
+                                         scaling=cfg.scaling, **cfg.kwargs)
+        return dev_sched.schedule(g, cfg.mode, cfg.geometry,
+                                  model=self._model(cfg.mode, cfg.geometry))
+
+    def run(self, configs: Iterable[SweepConfig],
+            callback: Callable[[SweepConfig, DeviceScheduleResult], None]
+            | None = None) -> list[DeviceScheduleResult]:
+        """Schedule every config; results align with the input order."""
+        out = []
+        for cfg in configs:
+            r = self.run_one(cfg)
+            if callback is not None:
+                callback(cfg, r)
+            out.append(r)
+        return out
+
+
+def run_grid(configs: Sequence[SweepConfig]) -> list[DeviceScheduleResult]:
+    """One-shot convenience wrapper around :class:`BatchRunner`."""
+    return BatchRunner().run(configs)
+
+
+def clear_caches() -> None:
+    """Drop every cross-config cache (for cold-start benchmarking)."""
+    from repro.core import taskgraph
+
+    partition._partitioned_struct.cache_clear()
+    for fn, _sig in taskgraph._STRUCTS.values():
+        fn.cache_clear()

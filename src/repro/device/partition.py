@@ -24,14 +24,25 @@ Placement policies (``place``):
 right virtual PE count for the geometry (``strong`` scaling: one
 fixed-size problem over all banks; ``weak``: one bank-sized replica per bank
 plus a cross-bank reduction onto bank 0) and applies a policy.
+
+Placement and composition are **mode independent** (only op durations vary
+with the interconnect), so the placed graph for one (app, geometry, policy,
+scaling, problem-size) cell is built once as a structural
+:class:`~repro.core.ir.TaskGraph` (``functools.lru_cache``) and materialized
+per mode — the fast path :class:`repro.device.batch.BatchRunner` sweeps
+over.  The legacy ``list[Task]`` API is preserved as converting wrappers.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterable, Sequence
 
-from repro.core import pluto, taskgraph
+import numpy as np
+
+from repro.core import ir, taskgraph
+from repro.core.ir import MOVE, NONE_SENTINEL, TaskGraph
 from repro.core.pluto import Interconnect
 from repro.core.scheduler import Task, _dsts
 from repro.device.geometry import DeviceGeometry
@@ -39,21 +50,13 @@ from repro.device.geometry import DeviceGeometry
 POLICIES = ("round_robin", "locality_first", "bandwidth_balanced")
 
 
-def _remap(tasks: Iterable[Task], pe_map: Sequence[int]) -> list[Task]:
-    out = []
-    for t in tasks:
-        out.append(dataclasses.replace(
-            t,
-            pe=None if t.pe is None else pe_map[t.pe],
-            src=None if t.src is None else pe_map[t.src],
-            dst=None if t.dst is None else (
-                tuple(pe_map[d] for d in t.dst) if isinstance(t.dst, tuple)
-                else pe_map[t.dst])))
-    return out
+# --- placement maps -------------------------------------------------------------
 
 
-def _block_weights(tasks: Iterable[Task], geom: DeviceGeometry) -> list[float]:
+def _block_weights(tasks, geom: DeviceGeometry) -> list[float]:
     """Cross-block row traffic incident to each contiguous virtual block."""
+    if isinstance(tasks, TaskGraph):
+        return _block_weights_ir(tasks, geom)
     ppb = geom.pes_per_bank
     w = [0.0] * geom.n_banks
     for t in tasks:
@@ -68,6 +71,22 @@ def _block_weights(tasks: Iterable[Task], geom: DeviceGeometry) -> list[float]:
     return w
 
 
+def _block_weights_ir(g: TaskGraph, geom: DeviceGeometry) -> list[float]:
+    """Vectorized :func:`_block_weights` (exact: integer row counts)."""
+    ppb, total = geom.pes_per_bank, geom.total_pes
+    moves = g.kinds == MOVE
+    counts = np.diff(g.dst_indptr)
+    src_blk = np.repeat((g.src % total) // ppb, counts)
+    rows = np.repeat(np.where(moves, g.rows, 0), counts)
+    dst_blk = (g.dst_flat % total) // ppb
+    cross = src_blk != dst_blk
+    w = np.bincount(src_blk[cross], weights=rows[cross],
+                    minlength=geom.n_banks)
+    w += np.bincount(dst_blk[cross], weights=rows[cross],
+                     minlength=geom.n_banks)
+    return w.tolist()
+
+
 def _spread_bank_order(geom: DeviceGeometry) -> list[int]:
     """Banks ordered so consecutive picks land on different channels/groups."""
     by_pos: list[int] = []
@@ -80,8 +99,12 @@ def _spread_bank_order(geom: DeviceGeometry) -> list[int]:
 
 
 def pe_map(geom: DeviceGeometry, policy: str,
-           tasks: Iterable[Task] | None = None) -> list[int]:
-    """virtual PE id -> global PE id, one entry per PE of the device."""
+           tasks=None) -> list[int]:
+    """virtual PE id -> global PE id, one entry per PE of the device.
+
+    ``tasks`` (a legacy task list or a :class:`TaskGraph`) is only needed by
+    the traffic-weighted ``bandwidth_balanced`` policy.
+    """
     ppb, nb = geom.pes_per_bank, geom.n_banks
     if policy == "locality_first":
         return list(range(geom.total_pes))
@@ -103,15 +126,56 @@ def pe_map(geom: DeviceGeometry, policy: str,
     raise ValueError(f"unknown policy {policy!r}; pick one of {POLICIES}")
 
 
-def place(tasks: Iterable[Task], geom: DeviceGeometry,
-          policy: str = "locality_first") -> list[Task]:
-    """Remap a virtual-PE task graph onto physical banks under a policy."""
+# --- applying a placement -------------------------------------------------------
+
+
+def _remap(tasks: Iterable[Task], pe_map: Sequence[int]) -> list[Task]:
+    out = []
+    for t in tasks:
+        out.append(dataclasses.replace(
+            t,
+            pe=None if t.pe is None else pe_map[t.pe],
+            src=None if t.src is None else pe_map[t.src],
+            dst=None if t.dst is None else (
+                tuple(pe_map[d] for d in t.dst) if isinstance(t.dst, tuple)
+                else pe_map[t.dst])))
+    return out
+
+
+def place_ir(g: TaskGraph, geom: DeviceGeometry,
+             policy: str = "locality_first") -> TaskGraph:
+    """Vectorized placement: remap every pe/src/dst array through the map."""
+    m = np.asarray(pe_map(geom, policy, g), dtype=np.int64)
+    pe = np.where(g.pe == NONE_SENTINEL, NONE_SENTINEL,
+                  m[np.where(g.pe == NONE_SENTINEL, 0, g.pe)])
+    src = np.where(g.src == NONE_SENTINEL, NONE_SENTINEL,
+                   m[np.where(g.src == NONE_SENTINEL, 0, g.src)])
+    return dataclasses.replace(g, pe=pe, src=src, dst_flat=m[g.dst_flat])
+
+
+def place(tasks, geom: DeviceGeometry,
+          policy: str = "locality_first"):
+    """Remap a virtual-PE task graph onto physical banks under a policy.
+
+    Accepts and returns either representation: a legacy task list yields a
+    task list, a :class:`TaskGraph` yields a placed :class:`TaskGraph`.
+    """
+    if isinstance(tasks, TaskGraph):
+        return place_ir(tasks, geom, policy)
     tasks = list(tasks)
     return _remap(tasks, pe_map(geom, policy, tasks))
 
 
-def cross_traffic_rows(tasks: Iterable[Task], geom: DeviceGeometry) -> int:
+def cross_traffic_rows(tasks, geom: DeviceGeometry) -> int:
     """Row deliveries whose endpoints sit in different banks (diagnostic)."""
+    if isinstance(tasks, TaskGraph):
+        g = tasks
+        counts = np.diff(g.dst_indptr)
+        src_bank = np.repeat((g.src % geom.total_pes)
+                             // geom.pes_per_bank, counts)
+        rows = np.repeat(np.where(g.kinds == MOVE, g.rows, 0), counts)
+        dst_bank = (g.dst_flat % geom.total_pes) // geom.pes_per_bank
+        return int(rows[src_bank != dst_bank].sum())
     n = 0
     for t in tasks:
         if t.kind != "move":
@@ -122,23 +186,161 @@ def cross_traffic_rows(tasks: Iterable[Task], geom: DeviceGeometry) -> int:
     return n
 
 
-def _sinks(tasks: Sequence[Task]) -> tuple[int, ...]:
-    used = {d for t in tasks for d in t.deps}
-    return tuple(t.uid for t in tasks if t.uid not in used)
+# --- partitioned app composition ------------------------------------------------
 
 
-def _offset(tasks: Sequence[Task], uid_off: int, pe_off: int) -> list[Task]:
-    out = []
-    for t in tasks:
-        out.append(dataclasses.replace(
-            t, uid=t.uid + uid_off,
-            deps=tuple(d + uid_off for d in t.deps),
-            pe=None if t.pe is None else t.pe + pe_off,
-            src=None if t.src is None else t.src + pe_off,
-            dst=None if t.dst is None else (
-                tuple(d + pe_off for d in t.dst) if isinstance(t.dst, tuple)
-                else t.dst + pe_off)))
-    return out
+def _sinks(g: TaskGraph) -> tuple[int, ...]:
+    used = np.unique(g.dep_pos)
+    return tuple(np.setdiff1d(np.arange(g.n), used, assume_unique=True)
+                 .tolist())
+
+
+@functools.lru_cache(maxsize=None)
+def _partitioned_struct(app: str, geom: DeviceGeometry, policy: str,
+                        scaling: str, kw_items: tuple) -> TaskGraph:
+    kw = dict(kw_items)
+    if scaling == "strong":
+        if app in ("bfs", "dfs"):
+            kw.setdefault("n_stripes", geom.n_banks)
+        g = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+        return ir.freeze(place_ir(g, geom, policy))
+    if scaling != "weak":
+        raise ValueError(f"scaling must be 'weak' or 'strong', got {scaling!r}")
+
+    ppb = geom.pes_per_bank
+    rep = taskgraph.structural(app, n_pes=ppb, **kw)
+    sinks = _sinks(rep)
+    agg_pe = 1 % ppb            # bank-0 aggregator subarray
+    add_cls = ir.OP_CLASSES.index("add")
+
+    b = _ReplicaConcat(rep)
+    prev_red: int | None = None
+    for bank in range(geom.n_banks):
+        off = b.append_replica(pe_off=bank * ppb)
+        if bank == 0:
+            continue
+        # result hand-off: one 32-bit row-vector of partials per replica
+        mv = b.append_move(src=bank * ppb + agg_pe, dst=agg_pe,
+                           deps=tuple(s + off for s in sinks),
+                           rows=taskgraph.SLICES_32, tag=f"reduce.mv b{bank}")
+        red = b.append_op(pe=agg_pe, op_class=add_cls,
+                          deps=(mv,) if prev_red is None else (mv, prev_red),
+                          tag=f"reduce.add b{bank}")
+        prev_red = red
+    return b.build()
+
+
+class _ReplicaConcat:
+    """Array-level concatenation of per-bank replicas plus reduction tasks."""
+
+    def __init__(self, rep: TaskGraph):
+        self.rep = rep
+        self.chunks: list[dict] = []
+        self.count = 0
+
+    def append_replica(self, pe_off: int) -> int:
+        rep = self.rep
+        off = self.count
+        self.chunks.append(dict(
+            kinds=rep.kinds,
+            dep_counts=np.diff(rep.dep_indptr),
+            dep_pos=rep.dep_pos + off,
+            duration=rep.duration,
+            op_class=rep.op_class,
+            pe=np.where(rep.pe == NONE_SENTINEL, NONE_SENTINEL,
+                        rep.pe + pe_off),
+            src=np.where(rep.src == NONE_SENTINEL, NONE_SENTINEL,
+                         rep.src + pe_off),
+            dst_counts=np.diff(rep.dst_indptr),
+            dst_flat=rep.dst_flat + pe_off,
+            dst_is_tuple=rep.dst_is_tuple,
+            rows=rep.rows,
+            tags=rep.tags if rep.tags is not None else ("",) * rep.n,
+        ))
+        self.count += rep.n
+        return off
+
+    def _append_one(self, **fields) -> int:
+        uid = self.count
+        self.chunks.append(fields)
+        self.count += 1
+        return uid
+
+    def append_move(self, src: int, dst: int, deps: tuple, rows: int,
+                    tag: str) -> int:
+        return self._append_one(
+            kinds=np.asarray([ir.MOVE], dtype=np.int8),
+            dep_counts=np.asarray([len(deps)]),
+            dep_pos=np.asarray(deps, dtype=np.int64),
+            duration=np.zeros(1),
+            op_class=np.asarray([-1], dtype=np.int16),
+            pe=np.asarray([NONE_SENTINEL], dtype=np.int64),
+            src=np.asarray([src], dtype=np.int64),
+            dst_counts=np.asarray([1]),
+            dst_flat=np.asarray([dst], dtype=np.int64),
+            dst_is_tuple=np.asarray([False]),
+            rows=np.asarray([rows], dtype=np.int64),
+            tags=(tag,))
+
+    def append_op(self, pe: int, op_class: int, deps: tuple,
+                  tag: str) -> int:
+        return self._append_one(
+            kinds=np.asarray([ir.OP], dtype=np.int8),
+            dep_counts=np.asarray([len(deps)]),
+            dep_pos=np.asarray(deps, dtype=np.int64),
+            duration=np.zeros(1),
+            op_class=np.asarray([op_class], dtype=np.int16),
+            pe=np.asarray([pe], dtype=np.int64),
+            src=np.asarray([NONE_SENTINEL], dtype=np.int64),
+            dst_counts=np.asarray([0]),
+            dst_flat=np.zeros(0, dtype=np.int64),
+            dst_is_tuple=np.asarray([False]),
+            rows=np.asarray([1], dtype=np.int64),
+            tags=(tag,))
+
+    def build(self) -> TaskGraph:
+        def cat(key, dtype=None):
+            arrs = [c[key] for c in self.chunks]
+            out = np.concatenate(arrs) if arrs else np.zeros(0)
+            return out.astype(dtype) if dtype is not None else out
+
+        dep_counts = cat("dep_counts", np.int64)
+        dst_counts = cat("dst_counts", np.int64)
+        dep_indptr = np.zeros(self.count + 1, dtype=np.int64)
+        np.cumsum(dep_counts, out=dep_indptr[1:])
+        dst_indptr = np.zeros(self.count + 1, dtype=np.int64)
+        np.cumsum(dst_counts, out=dst_indptr[1:])
+        tags = tuple(t for c in self.chunks for t in c["tags"])
+        return ir.freeze(TaskGraph(
+            uids=np.arange(self.count, dtype=np.int64),
+            kinds=cat("kinds", np.int8),
+            dep_indptr=dep_indptr,
+            dep_pos=cat("dep_pos", np.int64),
+            duration=cat("duration", np.float64),
+            op_class=cat("op_class", np.int16),
+            pe=cat("pe", np.int64),
+            src=cat("src", np.int64),
+            dst_indptr=dst_indptr,
+            dst_flat=cat("dst_flat", np.int64),
+            dst_is_tuple=cat("dst_is_tuple", bool),
+            rows=cat("rows", np.int64),
+            tags=tags))
+
+
+def partitioned_struct(app: str, geom: DeviceGeometry,
+                       policy: str = "locality_first",
+                       scaling: str = "strong", **kw) -> TaskGraph:
+    """Memoized mode-independent placed graph for one sweep cell."""
+    return _partitioned_struct(app, geom, policy, scaling,
+                               tuple(sorted(kw.items())))
+
+
+def build_partitioned_ir(app: str, mode: Interconnect, geom: DeviceGeometry,
+                         policy: str = "locality_first",
+                         scaling: str = "strong", **kw) -> TaskGraph:
+    """IR fast path of :func:`build_partitioned` (no Task objects)."""
+    return ir.materialize(partitioned_struct(app, geom, policy, scaling,
+                                             **kw), mode)
 
 
 def build_partitioned(app: str, mode: Interconnect, geom: DeviceGeometry,
@@ -154,34 +356,5 @@ def build_partitioned(app: str, mode: Interconnect, geom: DeviceGeometry,
     deployment pays.  Replicas are bank-local by construction, so ``policy``
     only shapes the strong-scaling layout.
     """
-    if scaling == "strong":
-        if app in ("bfs", "dfs"):
-            kw.setdefault("n_stripes", geom.n_banks)
-        tasks = taskgraph.build(app, mode, n_pes=geom.total_pes, **kw)
-        return place(tasks, geom, policy)
-    if scaling != "weak":
-        raise ValueError(f"scaling must be 'weak' or 'strong', got {scaling!r}")
-
-    ppb = geom.pes_per_bank
-    all_tasks: list[Task] = []
-    agg_pe = 1 % ppb            # bank-0 aggregator subarray
-    t_add = pluto.op32_latency_ns("add", mode)
-    prev_red: int | None = None
-    for b in range(geom.n_banks):
-        replica = taskgraph.build(app, mode, n_pes=ppb, **kw)
-        replica = _offset(replica, uid_off=len(all_tasks), pe_off=b * ppb)
-        sinks = _sinks(replica)
-        all_tasks.extend(replica)
-        if b == 0:
-            continue
-        # result hand-off: one 32-bit row-vector of partials per replica
-        mv = Task(len(all_tasks), "move", deps=sinks, src=b * ppb + agg_pe,
-                  dst=agg_pe, rows=taskgraph.SLICES_32, tag=f"reduce.mv b{b}")
-        all_tasks.append(mv)
-        red = Task(len(all_tasks), "op",
-                   deps=(mv.uid,) if prev_red is None
-                   else (mv.uid, prev_red),
-                   pe=agg_pe, duration=t_add, tag=f"reduce.add b{b}")
-        all_tasks.append(red)
-        prev_red = red.uid
-    return all_tasks
+    return ir.to_tasks(build_partitioned_ir(app, mode, geom, policy=policy,
+                                            scaling=scaling, **kw))

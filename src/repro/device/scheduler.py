@@ -1,6 +1,6 @@
-"""Hierarchical list scheduler over a multi-bank DRAM device.
+"""Device-scale PIM scheduling: a thin shim over the resource-token engine.
 
-Extends the single-bank engine (:mod:`repro.core.scheduler`) to a full
+Extends the single-bank model to a full
 :class:`~repro.device.geometry.DeviceGeometry`: tasks address **global PE
 ids**, intra-bank moves keep the exact single-bank resource semantics (LISA
 span stalls vs Shared-PIM BK-bus + shared-row tokens), and moves whose
@@ -8,35 +8,30 @@ endpoints live in different banks are routed through the cheapest legal path
 of the hierarchy (bank-group bus, then channel I/O) with contention modeled
 on every shared resource along the route.
 
-Cross-bank concurrency semantics (see :mod:`repro.device.interconnect`):
-
-* LISA is circuit-switched — a cross-bank move holds the source RBM span,
-  every transit bus on the route, and the destination span for its whole
-  duration; both banks' PEs in the spans stall.
-* Shared-PIM is store-and-forward — shared rows stage the stream at each
-  hop, so drain / transit / fill each hold only their own resource for their
-  own window and no PE stalls.
+All of those semantics are expressed as declarative resource-token claims by
+:class:`repro.device.resources.DeviceModel` and executed by
+:func:`repro.core.engine.run`; this module only configures the model and
+wraps the engine's raw stats into :class:`DeviceScheduleResult`.  Like the
+single-bank shim, ``schedule`` accepts a legacy task iterable or a pre-built
+:class:`~repro.core.ir.TaskGraph`.
 
 **Single-bank equivalence**: with ``DeviceGeometry(channels=1,
-banks_per_channel=1)`` every task is intra-bank and the engine walks the
-identical code path with identical float arithmetic as
-``core.scheduler.schedule`` — makespan, busy/stall times, counts, energy and
-per-task finish times reproduce bit-for-bit (enforced by
-``tests/test_device.py``).
+banks_per_channel=1)`` every task is intra-bank and the compiled claim
+segments coincide with :class:`~repro.core.engine.BankModel`'s — makespan,
+busy/stall times, counts, energy and per-task finish times reproduce
+``core.scheduler.schedule`` bit-for-bit (enforced by ``tests/test_device.py``
+and the golden-schedule suite).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Iterable
 
-from repro.core import pluto
+from repro.core import engine, ir, pluto
 from repro.core.pluto import Interconnect
-from repro.core.scheduler import (Bank, Task, _dsts, _move_latency,
-                                  _topo_order, improvement)
-from repro.device import interconnect as xbar
+from repro.core.scheduler import Graphish, as_graph, improvement
 from repro.device.geometry import DeviceGeometry, SINGLE_BANK
+from repro.device.resources import DeviceModel
 
 
 @dataclasses.dataclass
@@ -73,272 +68,45 @@ class DeviceScheduleResult:
         return self.n_ops * pluto.E_LUT_PASS
 
 
-class _DeviceState:
-    """Free-time bookkeeping for every resource in the hierarchy."""
+def schedule(tasks_in: Graphish, mode: Interconnect,
+             geometry: DeviceGeometry = SINGLE_BANK, *,
+             model: DeviceModel | None = None) -> DeviceScheduleResult:
+    """List-schedule a global-PE task graph on the whole device.
 
-    def __init__(self, geom: DeviceGeometry):
-        self.banks = [Bank(geom.pes_per_bank) for _ in range(geom.n_banks)]
-        self.group_bus_free = [0.0] * geom.n_groups
-        self.chan_bus_free = [0.0] * geom.channels
-
-
-def _transit_resources(geom: DeviceGeometry, src_bank: int, dst_bank: int,
-                       route: str) -> tuple[list[int], list[int]]:
-    """(group-bus indices, channel-bus indices) held by the transit leg."""
-    sg, dg = geom.group_of_bank(src_bank), geom.group_of_bank(dst_bank)
-    sc, dc = geom.channel_of_bank(src_bank), geom.channel_of_bank(dst_bank)
-    if route == "group":
-        return [sg], []
-    if route == "channel":
-        return [sg, dg], [sc]
-    return [sg, dg], [sc, dc]          # "device"
-
-
-def _split_by_bank(geom: DeviceGeometry, dsts: tuple[int, ...]
-                   ) -> dict[int, list[int]]:
-    """Destinations grouped by bank, preserving first-appearance order."""
-    groups: dict[int, list[int]] = {}
-    for d in dsts:
-        groups.setdefault(geom.bank_of(d), []).append(d)
-    return groups
-
-
-def _device_move_latency(mode: Interconnect, geom: DeviceGeometry,
-                         t: Task) -> float:
-    """Contention-free latency estimate of a move (list-scheduling priority).
-
-    Intra-bank moves use the single-bank model on the raw ids (identical
-    floats to ``core.scheduler``); cross-bank moves sum the routed plan per
-    destination bank plus any intra-bank fan-out at the destination.
+    ``model`` lets callers reuse one :class:`DeviceModel` (and its memoized
+    cross-bank plan prices) across many schedules of the same (mode,
+    geometry) — the batch runner's fast path.  It must match ``mode`` and
+    ``geometry``.  Structural graphs with symbolic op classes are
+    materialized for ``mode`` here (idempotent when already materialized).
     """
-    src = t.src % geom.total_pes
-    dsts = tuple(d % geom.total_pes for d in _dsts(t))
-    src_bank = geom.bank_of(src)
-    if all(geom.bank_of(d) == src_bank for d in dsts):
-        return _move_latency(mode, t.src, _dsts(t), t.rows)
-    total = 0.0
-    for bank, group in _split_by_bank(geom, dsts).items():
-        if bank == src_bank:
-            total += _move_latency(mode, src, tuple(group), t.rows)
-            continue
-        p = xbar.plan(mode, geom, src, group[0])
-        total += p.total_ns(t.rows)
-        if len(group) > 1:
-            # fan out from the bank port to the remaining destinations
-            total += _move_latency(mode, bank * geom.pes_per_bank,
-                                   tuple(group[1:]), t.rows)
-    return total
-
-
-def _critical_path(tasks: dict[int, Task], succ: dict[int, list[int]],
-                   mode: Interconnect, geom: DeviceGeometry
-                   ) -> dict[int, float]:
-    order = _topo_order(tasks, succ)
-    cp: dict[int, float] = {}
-    for uid in reversed(order):
-        t = tasks[uid]
-        dur = t.duration if t.kind == "op" \
-            else _device_move_latency(mode, geom, t)
-        cp[uid] = dur + max((cp[s] for s in succ.get(uid, ())), default=0.0)
-    return cp
-
-
-def schedule(tasks_in: Iterable[Task], mode: Interconnect,
-             geometry: DeviceGeometry = SINGLE_BANK) -> DeviceScheduleResult:
-    """List-schedule a global-PE task graph on the whole device."""
-    geom = geometry
-    tasks = {t.uid: t for t in tasks_in}
-    succ: dict[int, list[int]] = {}
-    for t in tasks.values():
-        for d in t.deps:
-            succ.setdefault(d, []).append(t.uid)
-    cp = _critical_path(tasks, succ, mode, geom)
-
-    dev = _DeviceState(geom)
-    finish: dict[int, float] = {}
-    indeg = {uid: len(t.deps) for uid, t in tasks.items()}
-    ready: list[tuple[float, float, int]] = []
-    for uid, d in indeg.items():
-        if d == 0:
-            heapq.heappush(ready, (-cp[uid], 0.0, uid))
-
-    op_busy = move_busy = stall = 0.0
-    n_ops = n_moves = n_rows = n_cross = 0
-    energy = 0.0
-    rows_by_route: dict[str, int] = {}
-    bus_busy = {"bank_group": 0.0, "channel": 0.0}
-    e_move_row = (pluto.E_MOVE_LISA if mode is Interconnect.LISA
-                  else pluto.E_MOVE_BUS)
-
-    def lisa_span_start(bank: Bank, lo: int, hi: int, floor: float) -> float:
-        return max(floor, *(bank.pe_free[p] for p in range(lo, hi + 1)))
-
-    def lisa_span_hold(bank: Bank, lo: int, hi: int, start: float,
-                       end: float) -> float:
-        s = 0.0
-        for p in range(lo, hi + 1):
-            s += end - max(start, bank.pe_free[p])
-            bank.pe_free[p] = end
-        return s
-
-    while ready:
-        _, ready_t, uid = heapq.heappop(ready)
-        t = tasks[uid]
-        dep_t = max((finish[d] for d in t.deps), default=0.0)
-        if t.kind == "op":
-            gpe = t.pe % geom.total_pes
-            bank = dev.banks[geom.bank_of(gpe)]
-            pe = geom.local_of(gpe)
-            start = max(dep_t, bank.pe_free[pe])
-            end = start + t.duration
-            bank.pe_free[pe] = end
-            op_busy += t.duration
-            n_ops += 1
-        elif t.kind == "move":
-            gsrc = t.src % geom.total_pes
-            gdsts = tuple(d % geom.total_pes for d in _dsts(t))
-            src_bank_i = geom.bank_of(gsrc)
-            src_bank = dev.banks[src_bank_i]
-            src = geom.local_of(gsrc)
-            if all(geom.bank_of(d) == src_bank_i for d in gdsts):
-                # --- intra-bank: the exact single-bank engine -------------------
-                dsts = tuple(geom.local_of(d) for d in gdsts)
-                dur = _move_latency(mode, src, dsts, t.rows)
-                if mode is Interconnect.LISA:
-                    lo = min((src, *dsts))
-                    hi = max((src, *dsts))
-                    start = lisa_span_start(src_bank, lo, hi, dep_t)
-                    end = start + dur
-                    stall += lisa_span_hold(src_bank, lo, hi, start, end)
-                else:
-                    start = max(dep_t, src_bank.bus_free,
-                                src_bank.tx_free[src],
-                                *(src_bank.rx_free[d] for d in dsts))
-                    end = start + dur
-                    src_bank.bus_free = end
-                    src_bank.tx_free[src] = end
-                    for d in dsts:
-                        src_bank.rx_free[d] = end
-                move_busy += dur
-                rows_by_route["intra"] = rows_by_route.get("intra", 0) \
-                    + t.rows * len(gdsts)
-            else:
-                # --- cross-bank: route each destination bank ------------------
-                end = dep_t
-                for bank_i, group in _split_by_bank(geom, gdsts).items():
-                    dsts = tuple(geom.local_of(d) for d in group)
-                    if bank_i == src_bank_i:
-                        dur = _move_latency(mode, src, dsts, t.rows)
-                        if mode is Interconnect.LISA:
-                            lo, hi = min((src, *dsts)), max((src, *dsts))
-                            s0 = lisa_span_start(src_bank, lo, hi, dep_t)
-                            e0 = s0 + dur
-                            stall += lisa_span_hold(src_bank, lo, hi, s0, e0)
-                        else:
-                            s0 = max(dep_t, src_bank.bus_free,
-                                     src_bank.tx_free[src],
-                                     *(src_bank.rx_free[d] for d in dsts))
-                            e0 = s0 + dur
-                            src_bank.bus_free = e0
-                            src_bank.tx_free[src] = e0
-                            for d in dsts:
-                                src_bank.rx_free[d] = e0
-                        move_busy += dur
-                        rows_by_route["intra"] = \
-                            rows_by_route.get("intra", 0) + t.rows * len(dsts)
-                        end = max(end, e0)
-                        continue
-                    dst_bank = dev.banks[bank_i]
-                    route = geom.route(src_bank_i, bank_i)
-                    p = xbar.plan(mode, geom, gsrc, group[0])
-                    gbuses, cbuses = _transit_resources(
-                        geom, src_bank_i, bank_i, route)
-                    # fan-out from the bank port to every destination in the
-                    # bank rides the intra-bank interconnect
-                    fill = _move_latency(mode, 0, dsts, t.rows)
-                    if mode is Interconnect.LISA:
-                        # circuit-switched: spans + all buses, end-to-end
-                        dur = t.rows * (p.drain_ns + p.transit_ns) + fill
-                        s_lo, s_hi = 0, src
-                        d_lo, d_hi = 0, max(dsts)
-                        s0 = max(dep_t,
-                                 lisa_span_start(src_bank, s_lo, s_hi, dep_t),
-                                 lisa_span_start(dst_bank, d_lo, d_hi, dep_t),
-                                 *(dev.group_bus_free[g] for g in gbuses),
-                                 *(dev.chan_bus_free[c] for c in cbuses))
-                        e0 = s0 + dur
-                        stall += lisa_span_hold(src_bank, s_lo, s_hi, s0, e0)
-                        stall += lisa_span_hold(dst_bank, d_lo, d_hi, s0, e0)
-                        for g in gbuses:
-                            bus_busy["bank_group"] += e0 - s0
-                            dev.group_bus_free[g] = e0
-                        for c in cbuses:
-                            bus_busy["channel"] += e0 - s0
-                            dev.chan_bus_free[c] = e0
-                        move_busy += dur
-                    else:
-                        # store-and-forward: each leg holds only its window
-                        drain = t.rows * p.drain_ns
-                        transit = t.rows * p.transit_ns
-                        s1 = max(dep_t, src_bank.bus_free,
-                                 src_bank.tx_free[src])
-                        e1 = s1 + drain
-                        src_bank.bus_free = e1
-                        src_bank.tx_free[src] = e1
-                        s2 = max(s1 + p.drain_ns,
-                                 *(dev.group_bus_free[g] for g in gbuses),
-                                 *(dev.chan_bus_free[c] for c in cbuses))
-                        e2 = s2 + transit
-                        for g in gbuses:
-                            bus_busy["bank_group"] += transit
-                            dev.group_bus_free[g] = e2
-                        for c in cbuses:
-                            bus_busy["channel"] += transit
-                            dev.chan_bus_free[c] = e2
-                        s3 = max(s2 + p.transit_ns, dst_bank.bus_free,
-                                 *(dst_bank.rx_free[d] for d in dsts))
-                        e0 = max(s3 + fill, e2 + p.fill_ns)
-                        dst_bank.bus_free = e0
-                        for d in dsts:
-                            dst_bank.rx_free[d] = e0
-                        move_busy += drain + transit + fill
-                    # drain + transit priced by the routed plan; the fill
-                    # fan-out is priced at the flat per-row coefficient with
-                    # every other delivery, in one multiply at the end
-                    energy += t.rows * (p.drain_energy_j + p.transit_energy_j)
-                    rows_by_route[route] = rows_by_route.get(route, 0) \
-                        + t.rows * len(dsts)
-                    end = max(end, e0)
-                n_cross += 1
-            n_moves += 1
-            n_rows += t.rows * len(gdsts)
-        else:
-            raise ValueError(f"unknown task kind {t.kind!r}")
-
-        finish[uid] = end
-        for s in succ.get(uid, ()):
-            indeg[s] -= 1
-            if indeg[s] == 0:
-                heapq.heappush(ready, (-cp[s], end, s))
-
-    if len(finish) != len(tasks):
-        raise ValueError("scheduler deadlock: not all tasks executed")
-    makespan = max(finish.values(), default=0.0)
+    if model is None:
+        model = DeviceModel(mode, geometry)
+    elif model.mode is not mode or model.geom != geometry:
+        raise ValueError(
+            f"model is for ({model.mode}, {model.geom.describe()}), "
+            f"not ({mode}, {geometry.describe()})")
+    g = ir.materialize(as_graph(tasks_in), mode)
+    stats = engine.run(g, model)
     # one flat per-row delivery charge across all routes (single multiply so
     # a 1-bank device reproduces ScheduleResult.transfer_energy_j bit-for-bit)
-    energy += sum(rows_by_route.values()) * e_move_row
+    e_move_row = (pluto.E_MOVE_LISA if mode is Interconnect.LISA
+                  else pluto.E_MOVE_BUS)
+    energy = stats.energy_j \
+        + sum(stats.rows_by_route.values()) * e_move_row
     return DeviceScheduleResult(
-        mode, geom, makespan, op_busy, move_busy, stall, n_ops, n_moves,
-        n_rows, finish, energy, n_cross, rows_by_route, bus_busy)
+        mode, geometry, stats.makespan_ns, stats.op_busy_ns,
+        stats.move_busy_ns, stats.stall_ns, stats.n_ops, stats.n_moves,
+        stats.n_rows_moved, stats.finish_times, energy, stats.n_cross_moves,
+        stats.rows_by_route, stats.bus_busy_ns)
 
 
-def compare(tasks: Iterable[Task], geometry: DeviceGeometry = SINGLE_BANK
+def compare(tasks: Graphish, geometry: DeviceGeometry = SINGLE_BANK
             ) -> dict[str, DeviceScheduleResult]:
     """Schedule the same device graph under both interconnects."""
-    tasks = list(tasks)
+    g = as_graph(tasks)
     return {
-        "lisa": schedule(tasks, Interconnect.LISA, geometry),
-        "shared_pim": schedule(tasks, Interconnect.SHARED_PIM, geometry),
+        "lisa": schedule(g, Interconnect.LISA, geometry),
+        "shared_pim": schedule(g, Interconnect.SHARED_PIM, geometry),
     }
 
 

@@ -25,7 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import SHAPES, shape_applicable

@@ -9,7 +9,6 @@ O(T^2) mask materialization), and (Sw/Ge)GLU MLPs.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -127,8 +126,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
     # blocks in the VJP instead of saving them — without this the scan
     # stores O(Tq * Tk) fp32 per layer and 32k prefill cannot fit
     body = jax.checkpoint(body)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return out.reshape(B, Tq, H, Dh).astype(q.dtype)
 
 

@@ -18,7 +18,6 @@ Python-unrolled towers.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

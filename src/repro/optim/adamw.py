@@ -72,7 +72,8 @@ def init_state(cfg: AdamWConfig, params: Params) -> dict:
         return {"m": jax.tree.map(zq, params),
                 "v": jax.tree.map(zq, params),
                 "step": jnp.zeros((), jnp.int32)}
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,132 @@
+"""Capture golden schedule outputs for the engine-equivalence tests.
+
+Runs the **preserved pre-refactor implementations**
+(:mod:`repro.core.reference`, :mod:`repro.device.reference`) — never the
+live engine under test, so regenerating the goldens cannot silently
+re-baseline them onto a regressed scheduler::
+
+    PYTHONPATH=src python tests/capture_goldens.py
+
+and commit the resulting ``tests/golden_schedules.json``.  The goldens pin
+every observable of a schedule — makespan, busy/stall breakdowns, counts,
+energy, and a SHA-256 digest of the per-task finish times packed as float64
+in uid order — so any refactor of the scheduling engine can be checked for
+**bit-for-bit** equivalence, not just approximate agreement.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import struct
+from pathlib import Path
+
+from repro.core import reference as core_sched
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+from repro.device import DeviceGeometry
+from repro.device import reference as dev_sched
+from repro.device.reference import build_partitioned
+
+GOLDEN_PATH = Path(__file__).parent / "golden_schedules.json"
+
+#: problem sizes small enough to schedule quickly but large enough to
+#: exercise resource contention, broadcast grouping, and striping
+APP_KW = {"mm": dict(n=30), "pmm": dict(n=30), "ntt": dict(n=64),
+          "bfs": dict(n_nodes=60), "dfs": dict(n_nodes=60)}
+
+#: device geometries: degenerate single bank, one flat channel, and a full
+#: 2-channel / 2-group hierarchy (exercises group/channel/device routes)
+GEOMETRIES = {
+    "1ch_1bank": dict(channels=1, banks_per_channel=1),
+    "1ch_4banks": dict(channels=1, banks_per_channel=4),
+    "2ch_4banks_2groups": dict(channels=2, banks_per_channel=4,
+                               bank_groups_per_channel=2),
+}
+
+#: handcrafted graphs exercising broadcast splits and mixed intra/cross moves
+SYNTH = {
+    "bcast_mixed": [
+        Task(0, "move", src=0, dst=(1, 17, 18, 33), rows=2),
+        Task(1, "op", deps=(0,), pe=17, duration=300.0),
+        Task(2, "move", deps=(1,), src=17, dst=70, rows=3),
+        Task(3, "op", pe=2, duration=100.0),
+    ],
+    "fanout5": [
+        Task(0, "op", pe=0, duration=50.0),
+        Task(1, "move", deps=(0,), src=0, dst=(1, 2, 3, 4, 5), rows=2),
+        Task(2, "op", deps=(1,), pe=5, duration=75.0),
+    ],
+}
+
+
+def finish_digest(finish_times: dict[int, float]) -> str:
+    blob = b"".join(struct.pack("<qd", uid, finish_times[uid])
+                    for uid in sorted(finish_times))
+    return hashlib.sha256(blob).hexdigest()
+
+
+def core_record(r) -> dict:
+    return {
+        "makespan_ns": r.makespan_ns,
+        "op_busy_ns": r.op_busy_ns,
+        "move_busy_ns": r.move_busy_ns,
+        "stall_ns": r.stall_ns,
+        "n_ops": r.n_ops,
+        "n_moves": r.n_moves,
+        "n_rows_moved": r.n_rows_moved,
+        "transfer_energy_j": r.transfer_energy_j,
+        "compute_energy_j": r.compute_energy_j,
+        "finish_sha256": finish_digest(r.finish_times),
+    }
+
+
+def device_record(r) -> dict:
+    rec = core_record(r)
+    rec.update({
+        "n_cross_moves": r.n_cross_moves,
+        "rows_by_route": dict(r.rows_by_route),
+        "bus_busy_ns": dict(r.bus_busy_ns),
+    })
+    return rec
+
+
+def main() -> None:
+    golden: dict = {"core": {}, "device": {}, "synth": {}}
+
+    for app, kw in APP_KW.items():
+        for mode in Interconnect:
+            tasks = core_sched.build(app, mode, **kw)
+            r = core_sched.schedule(tasks, mode)
+            golden["core"][f"{app}/{mode.value}"] = core_record(r)
+
+    for gname, gkw in GEOMETRIES.items():
+        geom = DeviceGeometry(**gkw)
+        for app, kw in APP_KW.items():
+            for mode in Interconnect:
+                for scaling in ("strong", "weak"):
+                    policies = (("locality_first", "round_robin",
+                                 "bandwidth_balanced")
+                                if scaling == "strong" and geom.n_banks > 1
+                                else ("locality_first",))
+                    for policy in policies:
+                        tasks = build_partitioned(app, mode, geom,
+                                                  policy=policy,
+                                                  scaling=scaling, **kw)
+                        r = dev_sched.schedule(tasks, mode, geom)
+                        key = f"{app}/{mode.value}/{gname}/{scaling}/{policy}"
+                        golden["device"][key] = device_record(r)
+
+    big = DeviceGeometry(**GEOMETRIES["2ch_4banks_2groups"])
+    for name, tasks in SYNTH.items():
+        for mode in Interconnect:
+            r = dev_sched.schedule(tasks, mode, big)
+            golden["synth"][f"{name}/{mode.value}"] = device_record(r)
+
+    GOLDEN_PATH.write_text(json.dumps(golden, indent=1, sort_keys=True))
+    n = sum(len(v) for v in golden.values())
+    print(f"wrote {GOLDEN_PATH} ({n} golden schedules)")
+
+
+if __name__ == "__main__":
+    main()

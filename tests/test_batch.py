@@ -1,0 +1,115 @@
+"""BatchRunner: grid scheduling, dedup correctness, sweep grid wiring."""
+
+import pytest
+
+from repro.core import taskgraph
+from repro.core.pluto import Interconnect
+from repro.device import (POLICIES, BatchRunner, DeviceGeometry, SweepConfig)
+from repro.device import batch as dbatch
+from repro.device import partition
+from repro.device import reference as dev_ref
+from repro.device import scheduler as dev_sched
+
+GEOM = DeviceGeometry(channels=2, banks_per_channel=2)
+
+FIELDS = ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns", "n_ops",
+          "n_moves", "n_rows_moved", "n_cross_moves", "transfer_energy_j",
+          "rows_by_route", "bus_busy_ns", "finish_times")
+
+
+def small_grid():
+    cfgs = []
+    for app, kw in (("mm", dict(n=20)), ("bfs", dict(n_nodes=40))):
+        for policy in POLICIES:
+            for mode in Interconnect:
+                cfgs.append(SweepConfig.make(app, mode, GEOM, policy=policy,
+                                             **kw))
+        for mode in Interconnect:
+            cfgs.append(SweepConfig.make(app, mode, GEOM, scaling="weak",
+                                         **kw))
+    return cfgs
+
+
+class TestBatchRunner:
+    def test_matches_reference_loop_bit_for_bit(self):
+        cfgs = small_grid()
+        batch = BatchRunner().run(cfgs)
+        for cfg, got in zip(cfgs, batch):
+            tasks = dev_ref.build_partitioned(
+                cfg.app, cfg.mode, cfg.geometry, policy=cfg.policy,
+                scaling=cfg.scaling, **cfg.kwargs)
+            want = dev_ref.schedule(tasks, cfg.mode, cfg.geometry)
+            for f in FIELDS:
+                assert getattr(got, f) == getattr(want, f), (cfg, f)
+
+    def test_results_align_with_config_order(self):
+        cfgs = small_grid()
+        res = BatchRunner().run(cfgs)
+        assert len(res) == len(cfgs)
+        for cfg, r in zip(cfgs, res):
+            assert r.mode is cfg.mode
+            assert r.geometry == cfg.geometry
+
+    def test_run_one_equals_plain_schedule(self):
+        cfg = SweepConfig.make("ntt", Interconnect.SHARED_PIM, GEOM,
+                               policy="round_robin", n=64)
+        got = BatchRunner().run_one(cfg)
+        tasks = partition.build_partitioned(cfg.app, cfg.mode, cfg.geometry,
+                                            policy=cfg.policy, **cfg.kwargs)
+        want = dev_sched.schedule(tasks, cfg.mode, cfg.geometry)
+        for f in FIELDS:
+            assert getattr(got, f) == getattr(want, f), f
+
+    def test_callback_sees_every_config(self):
+        cfgs = small_grid()[:4]
+        seen = []
+        BatchRunner().run(cfgs, callback=lambda c, r: seen.append(c))
+        assert seen == cfgs
+
+    def test_model_reuse_across_configs(self):
+        runner = BatchRunner()
+        runner.run(small_grid())
+        # one model per (mode, geometry), not per config
+        assert len(runner._models) == 2
+
+    def test_clear_caches_resets_structural_memos(self):
+        BatchRunner().run(small_grid()[:2])
+        assert partition._partitioned_struct.cache_info().currsize > 0
+        dbatch.clear_caches()
+        assert partition._partitioned_struct.cache_info().currsize == 0
+        assert taskgraph._matmul_struct.cache_info().currsize == 0
+
+
+class TestSweepBenchmarkWiring:
+    def test_build_grid_covers_axes(self):
+        from benchmarks.sweep import APP_KW_SMOKE, build_grid
+        cfgs = build_grid(APP_KW_SMOKE, [2, 4], channels=1)
+        assert {c.app for c in cfgs} == set(APP_KW_SMOKE)
+        assert {c.policy for c in cfgs} == set(POLICIES)
+        assert {c.geometry.n_banks for c in cfgs} == {4}
+        # both interconnects for every (app, policy) cell
+        assert len(cfgs) == len(APP_KW_SMOKE) * len(POLICIES) * 2
+
+    def test_equivalence_checker_flags_differences(self):
+        from benchmarks.sweep import equivalence_mismatches
+        cfg = SweepConfig.make("mm", Interconnect.LISA, GEOM, n=10)
+        r = BatchRunner().run([cfg])
+        assert equivalence_mismatches(r, r) == []
+        import dataclasses
+        other = [dataclasses.replace(r[0], makespan_ns=r[0].makespan_ns + 1)]
+        assert equivalence_mismatches(r, other) \
+            == ["config 0: makespan_ns differs"]
+
+
+class TestSweepConfig:
+    def test_hashable_and_kwargs_roundtrip(self):
+        a = SweepConfig.make("mm", Interconnect.LISA, GEOM, n=10, out_rows=4)
+        b = SweepConfig.make("mm", Interconnect.LISA, GEOM, out_rows=4, n=10)
+        assert a == b and hash(a) == hash(b)
+        assert a.kwargs == {"n": 10, "out_rows": 4}
+
+    def test_bad_scaling_rejected_at_build(self):
+        cfg = SweepConfig.make("mm", Interconnect.LISA, GEOM,
+                               scaling="sideways", n=10)
+        with pytest.raises(ValueError, match="scaling"):
+            BatchRunner().run_one(cfg)

@@ -1,7 +1,5 @@
 """Table II / Fig 6 / Table IV reproduction tests for the copy models."""
 
-import math
-
 import pytest
 
 from repro.core import copy_models as cm

@@ -1,7 +1,6 @@
 """Unit tests for dry-run mechanics that don't need 512 devices."""
 
 import jax
-import pytest
 
 
 def test_collective_parser():
@@ -90,7 +89,7 @@ def test_mesh_factory_shapes():
 
 
 def test_roofline_model_flops_sanity():
-    from benchmarks.roofline import _param_counts, model_flops
+    from benchmarks.roofline import _param_counts
     from repro.configs import registry
     # published sizes within 20%
     sizes = {"gemma2-9b": 9e9, "glm4-9b": 9e9, "falcon-mamba-7b": 7e9,

@@ -1,0 +1,161 @@
+"""Bit-for-bit equivalence of the resource-token engine with the goldens.
+
+``tests/golden_schedules.json`` (captured by ``tests/capture_goldens.py``
+from the pre-refactor schedulers) pins every observable of 114 schedules:
+makespan, busy/stall breakdowns, counts, energy, route/bus breakdowns, and
+a SHA-256 digest of the per-task finish times.  The refactored engine must
+reproduce all of them exactly — no tolerance.
+
+A second layer cross-checks the engine against the *live* legacy
+implementations (:mod:`repro.core.reference`, :mod:`repro.device.reference`)
+on randomized graphs, covering shapes the golden grid does not.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
+
+from capture_goldens import (APP_KW, GEOMETRIES, SYNTH, core_record,
+                             device_record)
+from repro.core import reference as core_ref
+from repro.core import scheduler as core_sched
+from repro.core import taskgraph
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+from repro.device import DeviceGeometry, build_partitioned
+from repro.device import reference as dev_ref
+from repro.device import scheduler as dev_sched
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_schedules.json").read_text())
+
+BIG = DeviceGeometry(**GEOMETRIES["2ch_4banks_2groups"])
+
+
+def _device_cases():
+    for gname in GEOMETRIES:
+        geom = DeviceGeometry(**GEOMETRIES[gname])
+        for app in APP_KW:
+            for scaling in ("strong", "weak"):
+                policies = (("locality_first", "round_robin",
+                             "bandwidth_balanced")
+                            if scaling == "strong" and geom.n_banks > 1
+                            else ("locality_first",))
+                for policy in policies:
+                    yield gname, app, scaling, policy
+
+
+class TestGoldenCore:
+    @pytest.mark.parametrize("app", sorted(APP_KW))
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_core_schedule_bit_for_bit(self, app, mode):
+        tasks = taskgraph.build(app, mode, **APP_KW[app])
+        rec = core_record(core_sched.schedule(tasks, mode))
+        assert rec == GOLDEN["core"][f"{app}/{mode.value}"]
+
+
+class TestGoldenDevice:
+    @pytest.mark.parametrize("gname,app,scaling,policy",
+                             sorted(set(_device_cases())))
+    def test_device_schedule_bit_for_bit(self, gname, app, scaling, policy):
+        geom = DeviceGeometry(**GEOMETRIES[gname])
+        for mode in Interconnect:
+            tasks = build_partitioned(app, mode, geom, policy=policy,
+                                      scaling=scaling, **APP_KW[app])
+            rec = device_record(dev_sched.schedule(tasks, mode, geom))
+            key = f"{app}/{mode.value}/{gname}/{scaling}/{policy}"
+            assert rec == GOLDEN["device"][key], key
+
+    @pytest.mark.parametrize("name", sorted(SYNTH))
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_synthetic_graphs_bit_for_bit(self, name, mode):
+        rec = device_record(dev_sched.schedule(SYNTH[name], mode, BIG))
+        assert rec == GOLDEN["synth"][f"{name}/{mode.value}"]
+
+
+CORE_FIELDS = ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns",
+               "n_ops", "n_moves", "n_rows_moved", "finish_times")
+DEVICE_FIELDS = CORE_FIELDS + ("transfer_energy_j", "n_cross_moves",
+                               "rows_by_route", "bus_busy_ns")
+
+
+def assert_same(a, b, fields):
+    for f in fields:
+        assert getattr(a, f) == getattr(b, f), f
+
+
+@st.composite
+def random_device_dag(draw):
+    n = draw(st.integers(2, 30))
+    total = BIG.total_pes
+    tasks = []
+    for i in range(n):
+        deps = tuple(d for d in range(max(0, i - 4), i)
+                     if draw(st.booleans()))
+        if draw(st.booleans()):
+            tasks.append(Task(i, "op", deps=deps,
+                              pe=draw(st.integers(0, total - 1)),
+                              duration=draw(st.floats(1.0, 1e4))))
+        else:
+            src = draw(st.integers(0, total - 1))
+            if draw(st.booleans()):
+                dst = draw(st.integers(0, total - 1)
+                           .filter(lambda d: d != src))
+            else:
+                dst = tuple(draw(
+                    st.lists(st.integers(0, total - 1).filter(
+                        lambda d: d != src),
+                        min_size=2, max_size=5, unique=True)))
+            tasks.append(Task(i, "move", deps=deps, src=src, dst=dst,
+                              rows=draw(st.integers(1, 8))))
+    return tasks
+
+
+class TestLiveReferenceDifferential:
+    """Engine vs the preserved legacy implementations on random graphs."""
+
+    @hypothesis.given(random_device_dag(), st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_core_engine_matches_reference(self, tasks, mode):
+        assert_same(core_sched.schedule(tasks, mode),
+                    core_ref.schedule(tasks, mode), CORE_FIELDS)
+
+    @hypothesis.given(random_device_dag(), st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_device_engine_matches_reference(self, tasks, mode):
+        assert_same(dev_sched.schedule(tasks, mode, BIG),
+                    dev_ref.schedule(tasks, mode, BIG), DEVICE_FIELDS)
+
+
+class TestDeterminism:
+    """Satellite: total (priority, uid) ordering — no tie-break accidents."""
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_repeat_runs_identical(self, mode):
+        tasks = taskgraph.build("mm", mode, n=30)
+        a = core_sched.schedule(tasks, mode)
+        b = core_sched.schedule(tasks, mode)
+        assert a.finish_times == b.finish_times
+        assert a.makespan_ns == b.makespan_ns
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_input_order_irrelevant(self, mode):
+        """Reversing task insertion order must not change the schedule."""
+        tasks = taskgraph.build("ntt", mode, n=64)
+        fwd = core_sched.schedule(tasks, mode)
+        rev = core_sched.schedule(list(reversed(tasks)), mode)
+        assert fwd.finish_times == rev.finish_times
+
+    def test_equal_priority_ties_break_by_uid(self):
+        # two identical ready ops contending for one PE: the lower uid must
+        # consistently schedule first
+        tasks = [Task(5, "op", pe=0, duration=10.0),
+                 Task(2, "op", pe=0, duration=10.0)]
+        r = core_sched.schedule(tasks, Interconnect.LISA)
+        assert r.finish_times[2] == 10.0
+        assert r.finish_times[5] == 20.0
+        r2 = core_sched.schedule(list(reversed(tasks)), Interconnect.LISA)
+        assert r2.finish_times == r.finish_times

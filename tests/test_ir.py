@@ -1,0 +1,137 @@
+"""TaskGraph IR: construction, round-trip, validation, derived structure."""
+
+import numpy as np
+import pytest
+
+from repro.core import taskgraph
+from repro.core.ir import GraphBuilder, from_tasks, materialize, to_tasks
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+
+
+def diamond_tasks():
+    return [
+        Task(0, "op", pe=0, duration=10.0),
+        Task(1, "move", deps=(0,), src=0, dst=2, rows=4),
+        Task(2, "move", deps=(0,), src=0, dst=(3, 4), rows=2),
+        Task(3, "op", deps=(1, 2), pe=2, duration=5.0, tag="join"),
+    ]
+
+
+class TestRoundTrip:
+    def test_from_to_tasks_identity(self):
+        tasks = diamond_tasks()
+        assert to_tasks(from_tasks(tasks)) == tasks
+
+    def test_arbitrary_uids_preserved(self):
+        tasks = [Task(42, "op", pe=1, duration=1.0),
+                 Task(7, "op", deps=(42,), pe=2, duration=2.0)]
+        g = from_tasks(tasks)
+        assert g.uids.tolist() == [42, 7]
+        assert to_tasks(g) == tasks
+
+    def test_app_builders_round_trip(self):
+        for app in sorted(taskgraph.APPS):
+            g = taskgraph.build_ir(app, Interconnect.LISA, n_pes=16)
+            assert to_tasks(g) == taskgraph.build(app, Interconnect.LISA,
+                                                  n_pes=16)
+
+    def test_scalar_vs_tuple_dst_distinguished(self):
+        tasks = [Task(0, "move", src=0, dst=1),
+                 Task(1, "move", src=0, dst=(1,))]
+        back = to_tasks(from_tasks(tasks))
+        assert back[0].dst == 1
+        assert back[1].dst == (1,)
+
+
+class TestValidation:
+    def test_cycle_names_uids(self):
+        tasks = [Task(10, "op", deps=(11,), pe=0, duration=1.0),
+                 Task(11, "op", deps=(10,), pe=0, duration=1.0),
+                 Task(12, "op", pe=0, duration=1.0)]
+        with pytest.raises(ValueError, match=r"cycle.*10.*11"):
+            from_tasks(tasks).validate()
+
+    def test_dangling_dep_names_offenders(self):
+        tasks = [Task(0, "op", pe=0, duration=1.0),
+                 Task(1, "op", deps=(99,), pe=0, duration=1.0)]
+        with pytest.raises(ValueError, match=r"dangling.*task 1.*99"):
+            from_tasks(tasks)
+
+    def test_duplicate_uids_rejected(self):
+        tasks = [Task(3, "op", pe=0, duration=1.0),
+                 Task(3, "op", pe=1, duration=1.0)]
+        with pytest.raises(ValueError, match=r"duplicate.*3"):
+            from_tasks(tasks)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown task kind"):
+            from_tasks([Task(0, "teleport", pe=0)])
+
+    def test_self_dependency_is_a_cycle(self):
+        with pytest.raises(ValueError, match="cycle"):
+            from_tasks([Task(0, "op", deps=(0,), pe=0)]).validate()
+
+    def test_op_without_pe_rejected(self):
+        # the legacy engine raised TypeError deep in the loop; the validator
+        # must reject up front instead of scheduling a sentinel-derived PE
+        with pytest.raises(ValueError, match=r"ops without a pe.*\[7\]"):
+            from_tasks([Task(7, "op", duration=5.0)]).validate()
+
+    def test_move_without_src_rejected(self):
+        with pytest.raises(ValueError, match=r"moves without a src.*\[3\]"):
+            from_tasks([Task(3, "move", dst=1, rows=2)]).validate()
+
+    def test_move_without_destinations_rejected(self):
+        b = GraphBuilder()
+        b.move(0, ())
+        with pytest.raises(ValueError, match="without destinations"):
+            b.build().validate()
+
+    def test_valid_graph_passes(self):
+        from_tasks(diamond_tasks()).validate()
+
+
+class TestDerivedStructure:
+    def test_levels(self):
+        g = from_tasks(diamond_tasks())
+        assert g.levels().tolist() == [0, 1, 1, 2]
+
+    def test_successors_mirror_deps(self):
+        g = from_tasks(diamond_tasks())
+        indptr, flat = g.successors()
+        assert flat[indptr[0]:indptr[1]].tolist() == [1, 2]
+        assert flat[indptr[1]:indptr[2]].tolist() == [3]
+        assert flat[indptr[3]:indptr[4]].tolist() == []
+
+    def test_empty_graph(self):
+        g = from_tasks([])
+        g.validate()
+        assert g.n == 0 and g.levels().tolist() == []
+
+
+class TestMaterialize:
+    def test_symbolic_durations_fill_per_mode(self):
+        b = GraphBuilder()
+        u = b.op(0, op_class="mul")
+        b.op(1, (u,), op_class="add")
+        g = b.build()
+        from repro.core import pluto
+        for mode in Interconnect:
+            m = materialize(g, mode)
+            assert m.duration[0] == pluto.op32_latency_ns("mul", mode)
+            assert m.duration[1] == pluto.op32_latency_ns("add", mode)
+        assert (g.duration == 0).all()      # structural graph untouched
+
+    def test_explicit_durations_pass_through(self):
+        g = from_tasks([Task(0, "op", pe=0, duration=123.0)])
+        assert materialize(g, Interconnect.LISA) is g
+
+    def test_structural_cache_shared_across_modes(self):
+        s1 = taskgraph.structural("mm", n=10, n_pes=16)
+        s2 = taskgraph.structural("mm", n=10, n_pes=16)
+        assert s1 is s2
+        a = taskgraph.build_ir("mm", Interconnect.LISA, n=10)
+        b = taskgraph.build_ir("mm", Interconnect.SHARED_PIM, n=10)
+        assert a.dep_pos is b.dep_pos        # structure shared
+        assert not np.array_equal(a.duration, b.duration)

@@ -4,7 +4,6 @@ All kernels run in interpret mode on CPU (the TPU BlockSpecs are exercised
 structurally; numerics are identical by construction of interpret mode).
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

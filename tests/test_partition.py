@@ -1,7 +1,6 @@
 """Sharding-rule unit tests (pure logic — no multi-device requirement)."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
