@@ -1,12 +1,70 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 Prints ``name,value,paper_value,match`` CSV for every reproduced paper
-table/figure, followed by the roofline summary (if a dry-run report exists).
+table/figure, the roofline summary (if a dry-run report exists), and a
+consolidated summary of every ``BENCH_*.json`` artifact in the repo root —
+one machine-readable row per artifact (name, headline metric, recorded
+guard verdict).  Exits non-zero if any paper-claim row mismatches **or any
+benchmark artifact recorded a failed guard** — a red BENCH file cannot hide
+behind a green paper table.
 """
 
 from __future__ import annotations
 
+import json
 import sys
+from pathlib import Path
+
+#: per-artifact headline extractors: stem -> (metric name, getter)
+_HEADLINES = {
+    "BENCH_sweep": ("batch_speedup_x", lambda d: d.get("speedup")),
+    "BENCH_device": ("max_improvement",
+                     lambda d: max((p["improvement"] for p in d.get("sweep", [])),
+                                   default=None)),
+    "BENCH_serving": ("sustained_load_shared_pim",
+                      lambda d: max(d.get("sustained_load", {})
+                                    .get("shared_pim", {}).values(),
+                                    default=None)),
+}
+
+#: keys whose recorded value constitutes a pass/fail guard, in the order
+#: they are consulted; every key present must pass
+_GUARD_KEYS = (
+    ("failures", lambda v: not v),
+    ("guard_ok", bool),
+    ("monotone_ok", bool),
+    ("bit_for_bit_identical", bool),
+    ("session_matches_offline", bool),
+)
+
+
+def summarize_bench_artifacts(root: str | Path = ".") -> list[dict]:
+    """One row per ``BENCH_*.json`` under ``root`` (sorted by name).
+
+    ``guard`` is ``"PASS"``/``"FAIL"`` from the guard keys the artifact
+    recorded, ``"NONE"`` when it recorded none, or ``"UNREADABLE"``.
+    """
+    rows = []
+    for path in sorted(Path(root).glob("BENCH_*.json")):
+        row = {"name": path.stem, "metric": "", "value": None,
+               "guard": "NONE"}
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            row["guard"] = "UNREADABLE"
+            rows.append(row)
+            continue
+        metric, getter = _HEADLINES.get(
+            path.stem, ("", lambda d: None))
+        try:
+            row["metric"], row["value"] = metric, getter(data)
+        except (KeyError, TypeError, ValueError):
+            pass
+        verdicts = [ok(data[key]) for key, ok in _GUARD_KEYS if key in data]
+        if verdicts:
+            row["guard"] = "PASS" if all(verdicts) else "FAIL"
+        rows.append(row)
+    return rows
 
 
 def main() -> None:
@@ -27,10 +85,27 @@ def main() -> None:
     except Exception as e:  # dry-run not yet executed — not an error here
         print(f"# roofline: no dry-run report ({e})", file=sys.stderr)
 
-    if bad:
-        print(f"# {bad} MISMATCH rows", file=sys.stderr)
+    # consolidated BENCH_*.json summary (guard verdicts recorded by the
+    # sweep / device-scaling / serving benchmarks)
+    bench = summarize_bench_artifacts()
+    bad_guards = 0
+    if bench:
+        print("artifact,metric,value,guard")
+        for row in bench:
+            v = f"{row['value']:.6g}" \
+                if isinstance(row["value"], (int, float)) else ""
+            print(f"{row['name']},{row['metric']},{v},{row['guard']}")
+            bad_guards += row["guard"] in ("FAIL", "UNREADABLE")
+
+    if bad or bad_guards:
+        if bad:
+            print(f"# {bad} MISMATCH rows", file=sys.stderr)
+        if bad_guards:
+            print(f"# {bad_guards} benchmark artifacts with failed guards",
+                  file=sys.stderr)
         sys.exit(1)
-    print("# all paper-claim checks passed")
+    print("# all paper-claim checks passed"
+          + (f"; {len(bench)} benchmark artifacts green" if bench else ""))
 
 
 if __name__ == "__main__":

@@ -20,19 +20,33 @@ each move a tuple of segments, each either
   transit / fill) that each hold only their own tokens for their own
   window — Shared-PIM's semantics for cross-bank streams.
 
-The event loop (:func:`run`) is a list scheduler: ready tasks are ordered by
-a **total** priority key ``(-critical_path, ready_time, uid)`` — the final
-``uid`` component makes tie-breaking deterministic by construction, never an
-accident of object identity or heap insertion order.  The critical-path
-priorities are computed by a NumPy-vectorized *levelized* sweep
-(:func:`critical_path`): tasks are bucketed by topological depth and each
-level's longest-path values are reduced in one vector operation, replacing
-the legacy per-task Python recursion.
+The event loop lives in :class:`EngineSession`, an *incremental* list
+scheduler: task graphs are admitted (possibly mid-flight, at any virtual
+time, with uid-offset splicing into the live ready state), the session is
+advanced to a time horizon, and per-job completion times are reported as
+jobs drain.  Ready tasks are ordered by a **total** priority key
+``(-critical_path, ready_time, uid)`` — the final ``uid`` component makes
+tie-breaking deterministic by construction, never an accident of object
+identity or heap insertion order.  The critical-path priorities are computed
+by a NumPy-vectorized *levelized* sweep (:func:`critical_path`): tasks are
+bucketed by topological depth and each level's longest-path values are
+reduced in one vector operation, replacing the legacy per-task Python
+recursion.
 
-The engine reproduces the legacy schedulers bit-for-bit (asserted against
-golden schedules in ``tests/test_golden_equivalence.py``): accounting
-accumulates in the same order and with the same float operations the legacy
-code used, down to the per-span stall subtotals.
+DRAM refresh is expressed in the same vocabulary as moves: a
+:class:`RefreshSpec` turns each bank's token block (the model's
+``refresh_units``) into a *periodic* CIRCUIT claim — every ``interval_ns``
+the unit's tokens are claimed for ``duration_ns``, so compute, Shared-PIM
+copies, and refresh contend through the ordinary free-time machinery rather
+than special-case code.  A session without a spec never touches the refresh
+path.
+
+The one-shot :func:`run` is a thin wrapper — one session, one graph admitted
+at t=0, advanced to completion — and reproduces the legacy schedulers
+bit-for-bit (asserted against golden schedules in
+``tests/test_golden_equivalence.py``): accounting accumulates in the same
+order and with the same float operations the legacy code used, down to the
+per-span stall subtotals.
 """
 
 from __future__ import annotations
@@ -164,6 +178,19 @@ class ResourceModel:
     def compile(self, g: TaskGraph) -> Compiled:
         raise NotImplementedError
 
+    def n_resources(self) -> int:
+        """Size of the token array (graph independent, per model)."""
+        raise NotImplementedError
+
+    def refresh_units(self) -> tuple[tuple[int, ...], ...]:
+        """Token sets refreshed together — one tuple per DRAM bank.
+
+        A :class:`RefreshSpec` turns each unit into a periodic CIRCUIT claim
+        over exactly these tokens; models without refreshable storage (none
+        in this repo) may return an empty tuple.
+        """
+        raise NotImplementedError
+
 
 class BankModel(ResourceModel):
     """One DRAM bank: ``n_pes`` subarray PEs plus the intra-bank interconnect.
@@ -185,6 +212,14 @@ class BankModel(ResourceModel):
         # coordinates, so memoize per signature (keyed on the RAW ids — the
         # priority latency is priced on them, pre-wrap)
         self._move_cache: dict = {}
+
+    def n_resources(self) -> int:
+        return 3 * self.n_pes + 1
+
+    def refresh_units(self) -> tuple[tuple[int, ...], ...]:
+        # one bank: every PE, the BK-bus and all shared-row tokens sit in
+        # the refreshing array, so a refresh claims the whole block
+        return (tuple(range(3 * self.n_pes + 1)),)
 
     def compile(self, g: TaskGraph) -> Compiled:
         n_pes = self.n_pes
@@ -301,6 +336,40 @@ def critical_path(g: TaskGraph, prio_dur: Sequence[float]) -> np.ndarray:
     return cp
 
 
+# --- refresh --------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshSpec:
+    """Periodic per-bank refresh, expressed as engine-level CIRCUIT claims.
+
+    Every ``interval_ns`` (tREFI) each refresh unit — one DRAM bank's whole
+    token block, as reported by the model's ``refresh_units`` — is claimed
+    for ``duration_ns`` (tRFC): compute ops, moves, and the refresh contend
+    through the ordinary token free-time machinery, no special cases.  With
+    ``stagger`` (the JEDEC per-bank refresh pattern) bank ``b`` of ``k`` is
+    phase-shifted by ``b/k`` of an interval so the whole device never blinks
+    at once.
+
+    A claim fires when the schedule frontier (the dependency-ready time of
+    the task about to execute) passes its due time; like real controllers,
+    a refresh may start late when the bank is still busy — it then pushes
+    everything behind it.  Defaults are DDR4 8Gb values.
+    """
+
+    interval_ns: float = 7800.0      # tREFI
+    duration_ns: float = 350.0       # tRFC
+    stagger: bool = True
+
+    def __post_init__(self) -> None:
+        if self.interval_ns <= 0.0:
+            raise ValueError(f"interval_ns must be > 0, got {self.interval_ns}")
+        if not 0.0 <= self.duration_ns < self.interval_ns:
+            raise ValueError(
+                f"duration_ns must lie in [0, interval_ns); got "
+                f"{self.duration_ns} vs interval {self.interval_ns}")
+
+
 # --- the event loop -------------------------------------------------------------
 
 
@@ -320,169 +389,402 @@ class EngineStats:
     rows_by_route: dict
     bus_busy_ns: dict
     finish_times: dict              # uid -> finish ns
+    #: bank-ns spent refreshing: one applied window = one bank (refresh
+    #: unit) claimed for duration_ns; divide by n_banks * makespan for the
+    #: per-bank refresh duty cycle
+    refresh_ns: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRecord:
+    """Lifecycle of one admitted graph inside an :class:`EngineSession`."""
+
+    job: int                # session-assigned job id (admission order)
+    admit_ns: float         # virtual time the graph was admitted
+    uid_offset: int         # added to the graph's uids inside the session
+    n_tasks: int
+    remaining: int          # unexecuted tasks (0 = complete)
+    finish_ns: float        # max task finish so far; final when remaining==0
+
+    @property
+    def done(self) -> bool:
+        return self.remaining == 0
+
+
+class EngineSession:
+    """Incremental event engine: admit graphs mid-flight, advance to horizons.
+
+    A session owns one :class:`ResourceModel`'s token array for its whole
+    lifetime.  :meth:`admit` splices a new task graph into the live ready
+    state — per-task arrays are appended at a position base, dependency
+    positions are rebased, and uids are offset so jobs cannot collide —
+    and :meth:`advance` runs the list scheduler until the ready queue
+    drains or every pending task's ready time reaches the horizon.
+    Completion times are reported per job, which is what the serving
+    runtime's latency accounting consumes.
+
+    Horizon semantics: ``advance(until)`` stops *before* executing the
+    highest-priority ready task whose dependency-ready time is ``>= until``
+    — scheduling decisions at or beyond the horizon are deferred until the
+    caller has admitted whatever arrives there, so a higher-priority
+    arrival can win resources from work that had not yet been committed.
+
+    With a :class:`RefreshSpec`, each refresh unit's periodic claim is
+    applied as the schedule frontier passes its due times, through the same
+    token free-time updates a CIRCUIT move uses.
+
+    One session + one graph admitted at t=0 + one full advance reproduces
+    :func:`run` bit-for-bit (same pop order, same float accumulation
+    order); ``run`` *is* that wrapper.  Per-task state is retained for the
+    session's lifetime (finish times are part of the result contract), so
+    a session's footprint grows with total admitted tasks.
+    """
+
+    def __init__(self, model: ResourceModel, *,
+                 refresh: RefreshSpec | None = None,
+                 validate: bool = True):
+        self.model = model
+        self.refresh = refresh
+        self._validate = validate
+        self.free = [0.0] * model.n_resources()
+        self.now = 0.0
+        self._heap: list = []
+        # per-task state, indexed by global position (job base + local pos)
+        self._exec_plan: list = []
+        self._neg_cp: list = []
+        self._succ: list = []
+        self._indeg: list = []
+        self._ready_t: list = []
+        self._finish: list = []
+        self._guids: list = []
+        self._job_of: list = []
+        # per-job state
+        self._job_admit: list = []
+        self._job_off: list = []
+        self._job_n: list = []
+        self._job_rem: list = []
+        self._job_fin: list = []
+        self._completed_backlog: list = []
+        self._n_live = 0
+        self._next_uid = 0
+        # float accounting (legacy accumulation order preserved)
+        self._op_busy = self._move_busy = self._stall = self._energy = 0.0
+        self._bus_busy = {"bank_group": 0.0, "channel": 0.0}
+        self._refresh_ns = 0.0
+        # integer statistics (order independent, summed at admit time)
+        self._n_ops = self._n_moves = self._n_rows = self._n_cross = 0
+        self._rows_by_route: dict = {}
+        self._rq: list = []          # (due_ns, unit, tokens) refresh heap
+        if refresh is not None:
+            units = model.refresh_units()
+            k = max(1, len(units))
+            for u, tokens in enumerate(units):
+                phase = refresh.interval_ns * u / k if refresh.stagger else 0.0
+                heapq.heappush(self._rq,
+                               (phase + refresh.interval_ns, u, tokens))
+
+    # --- introspection ----------------------------------------------------------
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self._job_admit)
+
+    @property
+    def n_pending_tasks(self) -> int:
+        return self._n_live
+
+    def job(self, job: int) -> JobRecord:
+        return JobRecord(job, self._job_admit[job], self._job_off[job],
+                         self._job_n[job], self._job_rem[job],
+                         self._job_fin[job])
+
+    # --- admission --------------------------------------------------------------
+
+    def admit(self, g: TaskGraph, *, at: float = 0.0,
+              uid_offset: int | None = None) -> int:
+        """Splice ``g`` into the live schedule at virtual time ``at``.
+
+        Returns the job id.  ``uid_offset`` defaults to 0 for the first
+        job and to the smallest shift that keeps uids collision-free for
+        later ones; session-facing uids are ``graph uid + offset``.
+        """
+        if self._validate:
+            g.validate()
+        comp = self.model.compile(g)
+        cp = critical_path(g, comp.prio_dur)
+        n = g.n
+        static = g._derived.get("loop_static")
+        if static is None:
+            succ_indptr, succ_flat = g.successors()
+            si = succ_indptr.tolist()
+            sf = succ_flat.tolist()
+            succ = [sf[si[i]:si[i + 1]] for i in range(n)]
+            uids = g.uids.tolist()
+            base_indeg = np.diff(g.dep_indptr).tolist()
+            sources = [i for i in range(n) if not base_indeg[i]]
+            # positional uids admit offset-free splicing at base 0
+            pos_uids = uids == list(range(n))
+            static = g._derived["loop_static"] = (succ, uids, base_indeg,
+                                                  sources, pos_uids)
+        succ, uids, base_indeg, sources, _pos_uids = static
+        if uid_offset is None:
+            uid_offset = 0 if not self._job_admit \
+                else self._next_uid - (int(g.uids.min()) if n else 0)
+
+        base = len(self._exec_plan)
+        job = len(self._job_admit)
+        self._exec_plan.extend(comp.exec_plan)
+        self._neg_cp.extend((-cp).tolist())
+        if base == 0:
+            # the cached successor lists are position-correct as-is; they
+            # are shared read-only (list() below keeps the outer list ours)
+            self._succ.extend(succ)
+        else:
+            self._succ.extend([x + base for x in lst] for lst in succ)
+        self._indeg.extend(base_indeg)
+        self._ready_t.extend([at] * n)
+        self._finish.extend([0.0] * n)
+        self._guids.extend(uids if uid_offset == 0
+                           else [u + uid_offset for u in uids])
+        self._job_of.extend([job] * n)
+        self._job_admit.append(at)
+        self._job_off.append(uid_offset)
+        self._job_n.append(n)
+        self._job_rem.append(n)
+        self._job_fin.append(at)
+        self._n_live += n
+        if n:
+            self._next_uid = max(self._next_uid,
+                                 uid_offset + int(g.uids.max()) + 1)
+        else:
+            self._completed_backlog.append(job)
+        self._n_ops += comp.n_ops
+        self._n_moves += comp.n_moves
+        self._n_rows += comp.n_rows
+        self._n_cross += comp.n_cross
+        for route, rows in comp.rows_by_route.items():
+            self._rows_by_route[route] = \
+                self._rows_by_route.get(route, 0) + rows
+        heap, neg_cp, guids = self._heap, self._neg_cp, self._guids
+        heappush = heapq.heappush
+        for i in sources:
+            gi = base + i
+            heappush(heap, (neg_cp[gi], at, guids[gi], gi))
+        return job
+
+    # --- the event loop ---------------------------------------------------------
+
+    def advance(self, until: float | None = None, *,
+                stop_on_completion: bool = False) -> list[int]:
+        """Run the list scheduler up to ``until`` (None = drain everything).
+
+        Returns the job ids that completed during this call, in completion
+        (execution) order.  With ``stop_on_completion`` the call returns as
+        soon as at least one job has completed — the serving runtime uses
+        this so freed bank leases re-admit queued work *before* the rest of
+        the in-flight schedule is committed, letting the admitted job
+        compete for resources on critical-path priority.
+        """
+        hz = float("inf") if until is None else until
+        heap = self._heap
+        free = self.free
+        exec_plan = self._exec_plan
+        ready_t = self._ready_t
+        finish = self._finish
+        succ = self._succ
+        indeg = self._indeg
+        neg_cp = self._neg_cp
+        guids = self._guids
+        job_of = self._job_of
+        job_rem = self._job_rem
+        job_fin = self._job_fin
+        rq = self._rq
+        spec = self.refresh
+        op_busy = self._op_busy
+        move_busy = self._move_busy
+        stall = self._stall
+        energy = self._energy
+        bus_busy = self._bus_busy
+        refresh_ns = self._refresh_ns
+        completed = self._completed_backlog
+        self._completed_backlog = []
+        n_exec = 0
+
+        heappush, heappop = heapq.heappush, heapq.heappop
+        while heap:
+            if completed and stop_on_completion:
+                break
+            if heap[0][1] >= hz:
+                break
+            i = heappop(heap)[3]
+            dep_t = ready_t[i]
+            if rq and rq[0][0] <= dep_t:
+                # the schedule frontier passed refresh due times: apply each
+                # unit's CIRCUIT claim (floored at its due time) and requeue
+                rint = spec.interval_ns
+                rdur = spec.duration_ns
+                while rq and rq[0][0] <= dep_t:
+                    due, u, toks = heappop(rq)
+                    s = due
+                    for r in toks:
+                        f = free[r]
+                        if f > s:
+                            s = f
+                    e = s + rdur
+                    for r in toks:
+                        free[r] = e
+                    refresh_ns += rdur
+                    heappush(rq, (due + rint, u, toks))
+            p = exec_plan[i]
+            lp = len(p)
+            if lp == 2:
+                rid, du = p
+                t0 = free[rid]
+                start = dep_t if dep_t > t0 else t0
+                end = start + du
+                free[rid] = end
+                op_busy += du
+            elif lp == 3:
+                # single-segment intra-bank move (common case, pre-flattened)
+                rids, stall_counts, du = p
+                s = dep_t
+                for r in rids:
+                    f = free[r]
+                    if f > s:
+                        s = f
+                end = s + du
+                for r in rids:
+                    free[r] = end
+                if stall_counts:
+                    span = end - s
+                    for cnt in stall_counts:
+                        sub = 0.0
+                        for _ in range(cnt):
+                            sub += span
+                        stall += sub
+                move_busy += du
+            else:
+                end = dep_t
+                for seg in p[0]:
+                    if seg[0] == CIRCUIT:
+                        _, rids, stall_counts, du, busy_keys, ej = seg
+                        s = dep_t
+                        for r in rids:
+                            f = free[r]
+                            if f > s:
+                                s = f
+                        e = s + du
+                        for r in rids:
+                            free[r] = e
+                        if stall_counts:
+                            span = e - s
+                            for cnt in stall_counts:
+                                sub = 0.0
+                                for _ in range(cnt):
+                                    sub += span
+                                stall += sub
+                        if busy_keys:
+                            span = e - s
+                            for k in busy_keys:
+                                bus_busy[k] += span
+                        move_busy += du
+                    else:
+                        (_, leg1, leg2, leg3, drain, transit, fill, drain1,
+                         transit1, fill1, mb, busy_keys, ej) = seg
+                        s1 = dep_t
+                        for r in leg1:
+                            f = free[r]
+                            if f > s1:
+                                s1 = f
+                        e1 = s1 + drain
+                        for r in leg1:
+                            free[r] = e1
+                        s2 = s1 + drain1
+                        for r in leg2:
+                            f = free[r]
+                            if f > s2:
+                                s2 = f
+                        e2 = s2 + transit
+                        for r in leg2:
+                            free[r] = e2
+                        for k in busy_keys:
+                            bus_busy[k] += transit
+                        s3 = s2 + transit1
+                        for r in leg3:
+                            f = free[r]
+                            if f > s3:
+                                s3 = f
+                        e = s3 + fill
+                        alt = e2 + fill1
+                        if alt > e:
+                            e = alt
+                        for r in leg3:
+                            free[r] = e
+                        move_busy += mb
+                    if ej:
+                        energy += ej
+                    if e > end:
+                        end = e
+
+            finish[i] = end
+            for s_ in succ[i]:
+                if ready_t[s_] < end:
+                    ready_t[s_] = end
+                nd = indeg[s_] - 1
+                indeg[s_] = nd
+                if not nd:
+                    heappush(heap, (neg_cp[s_], end, guids[s_], s_))
+            j = job_of[i]
+            if job_fin[j] < end:
+                job_fin[j] = end
+            rem = job_rem[j] - 1
+            job_rem[j] = rem
+            if not rem:
+                completed.append(j)
+            n_exec += 1
+
+        self._n_live -= n_exec
+        if not heap and self._n_live:
+            raise RuntimeError("engine deadlock: not all tasks executed "
+                               "(graph validation should have caught this)")
+        self._op_busy = op_busy
+        self._move_busy = move_busy
+        self._stall = stall
+        self._energy = energy
+        self._refresh_ns = refresh_ns
+        if until is None:
+            mx = max(finish) if finish else 0.0
+            if mx > self.now:
+                self.now = mx
+        elif until > self.now:
+            self.now = until
+        return completed
+
+    # --- results ----------------------------------------------------------------
+
+    def stats(self) -> EngineStats:
+        """Aggregate schedule outcome over everything executed so far."""
+        finish = self._finish
+        return EngineStats(
+            makespan_ns=max(finish) if finish else 0.0,
+            op_busy_ns=self._op_busy, move_busy_ns=self._move_busy,
+            stall_ns=self._stall, n_ops=self._n_ops, n_moves=self._n_moves,
+            n_rows_moved=self._n_rows, n_cross_moves=self._n_cross,
+            energy_j=self._energy, rows_by_route=self._rows_by_route,
+            bus_busy_ns=self._bus_busy,
+            finish_times=dict(zip(self._guids, finish)),
+            refresh_ns=self._refresh_ns)
 
 
 def run(g: TaskGraph, model: ResourceModel, *,
         validate: bool = True) -> EngineStats:
-    """List-schedule ``g`` on ``model``'s resource tokens."""
-    if validate:
-        g.validate()
-    comp = model.compile(g)
-    cp = critical_path(g, comp.prio_dur)
+    """List-schedule ``g`` on ``model``'s resource tokens (one-shot).
 
-    n = g.n
-    static = g._derived.get("loop_static")
-    if static is None:
-        succ_indptr, succ_flat = g.successors()
-        si = succ_indptr.tolist()
-        sf = succ_flat.tolist()
-        succ = [sf[si[i]:si[i + 1]] for i in range(n)]
-        uids = g.uids.tolist()
-        base_indeg = np.diff(g.dep_indptr).tolist()
-        sources = [i for i in range(n) if not base_indeg[i]]
-        # positional uids admit 3-element heap entries (uid == position)
-        pos_uids = uids == list(range(n))
-        static = g._derived["loop_static"] = (succ, uids, base_indeg,
-                                              sources, pos_uids)
-    succ, uids, base_indeg, sources, pos_uids = static
-    neg_cp = (-cp).tolist()
-    indeg = base_indeg.copy()
-    exec_plan = comp.exec_plan
-
-    free = [0.0] * comp.n_resources
-    finish = [0.0] * n
-    # dependency-ready time per task, maintained incrementally as
-    # predecessors finish (identical floats: IEEE max is order independent)
-    ready_t = [0.0] * n
-    op_busy = move_busy = stall = energy = 0.0
-    bus_busy = {"bank_group": 0.0, "channel": 0.0}
-
-    heappush, heappop = heapq.heappush, heapq.heappop
-    heap: list = []
-    for i in sources:
-        heappush(heap, (neg_cp[i], 0.0, i) if pos_uids
-                 else (neg_cp[i], 0.0, uids[i], i))
-
-    while heap:
-        i = heappop(heap)[-1]
-        dep_t = ready_t[i]
-        p = exec_plan[i]
-        lp = len(p)
-        if lp == 2:
-            rid, du = p
-            t0 = free[rid]
-            start = dep_t if dep_t > t0 else t0
-            end = start + du
-            free[rid] = end
-            op_busy += du
-        elif lp == 3:
-            # single-segment intra-bank move (the common case, pre-flattened)
-            rids, stall_counts, du = p
-            s = dep_t
-            for r in rids:
-                f = free[r]
-                if f > s:
-                    s = f
-            end = s + du
-            for r in rids:
-                free[r] = end
-            if stall_counts:
-                span = end - s
-                for cnt in stall_counts:
-                    sub = 0.0
-                    for _ in range(cnt):
-                        sub += span
-                    stall += sub
-            move_busy += du
-        else:
-            end = dep_t
-            for seg in p[0]:
-                if seg[0] == CIRCUIT:
-                    _, rids, stall_counts, du, busy_keys, ej = seg
-                    s = dep_t
-                    for r in rids:
-                        f = free[r]
-                        if f > s:
-                            s = f
-                    e = s + du
-                    for r in rids:
-                        free[r] = e
-                    if stall_counts:
-                        span = e - s
-                        for cnt in stall_counts:
-                            sub = 0.0
-                            for _ in range(cnt):
-                                sub += span
-                            stall += sub
-                    if busy_keys:
-                        span = e - s
-                        for k in busy_keys:
-                            bus_busy[k] += span
-                    move_busy += du
-                else:
-                    (_, leg1, leg2, leg3, drain, transit, fill, drain1,
-                     transit1, fill1, mb, busy_keys, ej) = seg
-                    s1 = dep_t
-                    for r in leg1:
-                        f = free[r]
-                        if f > s1:
-                            s1 = f
-                    e1 = s1 + drain
-                    for r in leg1:
-                        free[r] = e1
-                    s2 = s1 + drain1
-                    for r in leg2:
-                        f = free[r]
-                        if f > s2:
-                            s2 = f
-                    e2 = s2 + transit
-                    for r in leg2:
-                        free[r] = e2
-                    for k in busy_keys:
-                        bus_busy[k] += transit
-                    s3 = s2 + transit1
-                    for r in leg3:
-                        f = free[r]
-                        if f > s3:
-                            s3 = f
-                    e = s3 + fill
-                    alt = e2 + fill1
-                    if alt > e:
-                        e = alt
-                    for r in leg3:
-                        free[r] = e
-                    move_busy += mb
-                if ej:
-                    energy += ej
-                if e > end:
-                    end = e
-
-        finish[i] = end
-        if pos_uids:
-            for s_ in succ[i]:
-                if ready_t[s_] < end:
-                    ready_t[s_] = end
-                nd = indeg[s_] - 1
-                indeg[s_] = nd
-                if not nd:
-                    heappush(heap, (neg_cp[s_], end, s_))
-        else:
-            for s_ in succ[i]:
-                if ready_t[s_] < end:
-                    ready_t[s_] = end
-                nd = indeg[s_] - 1
-                indeg[s_] = nd
-                if not nd:
-                    heappush(heap, (neg_cp[s_], end, uids[s_], s_))
-
-    if any(indeg):
-        raise RuntimeError("engine deadlock: not all tasks executed "
-                           "(graph validation should have caught this)")
-    makespan = max(finish) if n else 0.0
-    return EngineStats(
-        makespan_ns=makespan, op_busy_ns=op_busy, move_busy_ns=move_busy,
-        stall_ns=stall, n_ops=comp.n_ops, n_moves=comp.n_moves,
-        n_rows_moved=comp.n_rows, n_cross_moves=comp.n_cross,
-        energy_j=energy, rows_by_route=comp.rows_by_route,
-        bus_busy_ns=bus_busy,
-        finish_times=dict(zip(uids, finish)))
+    A thin wrapper over :class:`EngineSession` — one graph admitted at
+    t=0, no refresh, advanced to completion — bit-for-bit identical to the
+    pre-session event loop (golden schedules assert this).
+    """
+    session = EngineSession(model, validate=validate)
+    session.admit(g, at=0.0, uid_offset=0)
+    session.advance()
+    return session.stats()

@@ -142,15 +142,55 @@ def _remap(tasks: Iterable[Task], pe_map: Sequence[int]) -> list[Task]:
     return out
 
 
-def place_ir(g: TaskGraph, geom: DeviceGeometry,
-             policy: str = "locality_first") -> TaskGraph:
-    """Vectorized placement: remap every pe/src/dst array through the map."""
-    m = np.asarray(pe_map(geom, policy, g), dtype=np.int64)
+def _remap_ir(g: TaskGraph, m: np.ndarray) -> TaskGraph:
+    """Apply a virtual-PE -> global-PE map to every pe/src/dst array."""
     pe = np.where(g.pe == NONE_SENTINEL, NONE_SENTINEL,
                   m[np.where(g.pe == NONE_SENTINEL, 0, g.pe)])
     src = np.where(g.src == NONE_SENTINEL, NONE_SENTINEL,
                    m[np.where(g.src == NONE_SENTINEL, 0, g.src)])
     return dataclasses.replace(g, pe=pe, src=src, dst_flat=m[g.dst_flat])
+
+
+def place_ir(g: TaskGraph, geom: DeviceGeometry,
+             policy: str = "locality_first") -> TaskGraph:
+    """Vectorized placement: remap every pe/src/dst array through the map."""
+    return _remap_ir(g, np.asarray(pe_map(geom, policy, g), dtype=np.int64))
+
+
+# --- bank-set leases (the serving runtime's dynamic tenancy) --------------------
+
+
+def lease_pe_map(geom: DeviceGeometry, banks: Sequence[int],
+                 policy: str = "locality_first",
+                 tasks=None) -> list[int]:
+    """Virtual PE id -> global PE id for a job leased the given bank set.
+
+    A leased job's graph addresses a *virtual device* of ``len(banks)``
+    banks; the ordinary placement policies apply within the lease (virtual
+    bank ``i`` is ``banks[i]``), so online tenants inherit exactly the
+    placement semantics the offline partitioner uses.  ``tasks`` feeds the
+    traffic-weighted ``bandwidth_balanced`` policy, as in :func:`pe_map`.
+    """
+    banks = list(banks)
+    if not banks:
+        raise ValueError("a lease needs at least one bank")
+    if len(set(banks)) != len(banks):
+        raise ValueError(f"duplicate banks in lease: {banks}")
+    bad = [b for b in banks if not 0 <= b < geom.n_banks]
+    if bad:
+        raise ValueError(f"banks {bad} out of range [0, {geom.n_banks})")
+    ppb = geom.pes_per_bank
+    sub = DeviceGeometry(channels=1, banks_per_channel=len(banks),
+                         pes_per_bank=ppb)
+    return [banks[p // ppb] * ppb + p % ppb
+            for p in pe_map(sub, policy, tasks)]
+
+
+def place_on_banks(g: TaskGraph, geom: DeviceGeometry, banks: Sequence[int],
+                   policy: str = "locality_first") -> TaskGraph:
+    """Remap a virtual-PE task graph onto a leased bank set (vectorized)."""
+    m = np.asarray(lease_pe_map(geom, banks, policy, g), dtype=np.int64)
+    return _remap_ir(g, m)
 
 
 def place(tasks, geom: DeviceGeometry,

@@ -74,6 +74,21 @@ class DeviceModel(engine.ResourceModel):
     def _chan_bus(self, c: int) -> int:
         return self.geom.n_banks * self._stride + self.geom.n_groups + c
 
+    def n_resources(self) -> int:
+        return self.geom.n_banks * self._stride + self.geom.n_groups \
+            + self.geom.channels
+
+    def refresh_units(self) -> tuple[tuple[int, ...], ...]:
+        """One refresh unit per bank: its PEs, BK-bus and shared rows.
+
+        The bank-group and channel buses are I/O wiring, not DRAM cells —
+        they carry no refresh claims, so cross-bank transit of *other*
+        banks keeps flowing while a bank refreshes (per-bank refresh).
+        """
+        stride = self._stride
+        return tuple(tuple(range(b * stride, (b + 1) * stride))
+                     for b in range(self.geom.n_banks))
+
     def _plan(self, src_pe: int, dst_pe: int) -> xbar.CrossBankPlan:
         geom = self.geom
         key = (geom.route(geom.bank_of(src_pe), geom.bank_of(dst_pe)),

@@ -1,0 +1,33 @@
+"""Online serving runtime: streaming multi-tenant PIM simulation.
+
+Layers the ROADMAP's serving goal on top of the resource-token engine:
+
+``trace``      deterministic open-loop (Poisson) / closed-loop job streams
+``allocator``  bank-set leasing with FIFO / SJF / priority admission
+``serve``      ServingRuntime: traces -> leases -> one live EngineSession
+
+Quickstart::
+
+    from repro.core.pluto import Interconnect
+    from repro.core.engine import RefreshSpec
+    from repro.device import DeviceGeometry
+    from repro import runtime
+
+    geom = DeviceGeometry(channels=1, banks_per_channel=8)
+    tenants = [runtime.TenantSpec.make("mm", "mm", n=40, banks=2,
+                                       rate_jps=2000.0),
+               runtime.TenantSpec.make("bfs", "bfs", n_nodes=120,
+                                       priority=1)]
+    trace = runtime.open_loop_trace(tenants, jobs_per_tenant=20, seed=0)
+    rt = runtime.ServingRuntime(Interconnect.SHARED_PIM, geom,
+                                admission="priority",
+                                refresh=RefreshSpec())
+    print(runtime.summarize(rt.run(trace))["latency_ns"])
+"""
+
+from repro.runtime.allocator import (ADMISSION_POLICIES,  # noqa: F401
+                                     BankAllocator, Lease)
+from repro.runtime.serve import (JobResult, ServingRuntime,  # noqa: F401
+                                 summarize)
+from repro.runtime.trace import (TRACE_APPS, ClosedLoopSource,  # noqa: F401
+                                 JobRequest, TenantSpec, open_loop_trace)

@@ -1,0 +1,122 @@
+"""Dynamic tenancy: bank-set leasing with pluggable admission policies.
+
+The serving runtime multiplexes many tenants onto one device by leasing
+each admitted job an exclusive *bank set* — the unit of spatial isolation
+the paper's interconnects actually contend over (a tenant inside its own
+banks only meets its neighbors on the shared bank-group / channel buses,
+where Shared-PIM's store-and-forward keeps flowing and LISA's circuit
+switching stalls).  Jobs that do not fit queue; leases release on job
+completion and the freed banks admit queued work.
+
+Admission policies (:data:`ADMISSION_POLICIES`):
+
+* ``fifo``     — strict arrival order; a large job at the head blocks the
+  queue (no backfill), the baseline any fairness argument starts from.
+* ``sjf``      — shortest job first by the caller-supplied cost estimate
+  (the serving driver passes the job graph's task count); classic
+  latency-optimal, starvation-prone.
+* ``priority`` — highest tenant priority first, FIFO within a priority.
+
+Selection within a policy is deterministic: ties break on the admission
+sequence number, and bank picking prefers the lowest-indexed *contiguous*
+free run (contiguous banks share bank-group buses, keeping a lease's
+cross-bank traffic on the cheapest route class) before falling back to the
+lowest free banks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any
+
+from repro.device.geometry import DeviceGeometry
+
+ADMISSION_POLICIES = ("fifo", "sjf", "priority")
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """An exclusive grant of ``banks`` to one admitted job."""
+
+    ticket: int                  # allocator-wide admission sequence number
+    banks: tuple[int, ...]
+    payload: Any = None          # whatever the caller attached to request()
+
+
+class BankAllocator:
+    """Bank-set leasing with FIFO / SJF / priority admission (see module)."""
+
+    def __init__(self, geom: DeviceGeometry, policy: str = "fifo"):
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; pick one "
+                             f"of {ADMISSION_POLICIES}")
+        self.geom = geom
+        self.policy = policy
+        self._free: set[int] = set(range(geom.n_banks))
+        self._queue: list = []               # heap of (key, banks, payload)
+        self._seq = 0
+
+    # --- introspection ----------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def free_banks(self) -> tuple[int, ...]:
+        return tuple(sorted(self._free))
+
+    # --- requests / releases ----------------------------------------------------
+
+    def request(self, banks: int, *, priority: int = 0, cost: float = 0.0,
+                payload: Any = None) -> list[Lease]:
+        """Queue one job wanting ``banks`` banks; return any new leases.
+
+        The request joins the queue and admission runs immediately, so the
+        returned leases may include this job, earlier queued jobs the
+        policy now prefers, or nothing.  Match leases to jobs via
+        ``lease.payload``.
+        """
+        if not 1 <= banks <= self.geom.n_banks:
+            raise ValueError(
+                f"job wants {banks} banks; device has {self.geom.n_banks}")
+        if self.policy == "sjf":
+            key = (cost, self._seq)
+        elif self.policy == "priority":
+            key = (-priority, self._seq)
+        else:
+            key = (self._seq,)
+        heapq.heappush(self._queue, (key, banks, payload))
+        self._seq += 1
+        return self._drain()
+
+    def release(self, lease: Lease) -> list[Lease]:
+        """Return a lease's banks and admit whatever now fits."""
+        if self._free & set(lease.banks):
+            raise ValueError(f"double release of banks "
+                             f"{sorted(self._free & set(lease.banks))}")
+        self._free.update(lease.banks)
+        return self._drain()
+
+    def _drain(self) -> list[Lease]:
+        """Admit from the queue head (policy order) while jobs fit."""
+        granted = []
+        while self._queue and self._queue[0][1] <= len(self._free):
+            _key, banks, payload = heapq.heappop(self._queue)
+            picked = self._pick_banks(banks)
+            self._free.difference_update(picked)
+            granted.append(Lease(self._seq, picked, payload))
+            self._seq += 1
+        return granted
+
+    def _pick_banks(self, k: int) -> tuple[int, ...]:
+        """Lowest contiguous free run of ``k`` banks, else lowest ``k``."""
+        free = sorted(self._free)
+        for i in range(len(free) - k + 1):
+            if free[i + k - 1] - free[i] == k - 1:
+                return tuple(free[i:i + k])
+        return tuple(free[:k])

@@ -1,0 +1,213 @@
+"""Online serving driver: job streams through one incremental engine session.
+
+:class:`ServingRuntime` is the layer the ROADMAP's "serve heavy traffic"
+goal asks for: a trace of :class:`~repro.runtime.trace.JobRequest` arrivals
+is admitted against a :class:`~repro.runtime.allocator.BankAllocator`
+(bank-set leases, FIFO / SJF / priority admission), each admitted job's
+graph is built for its lease via the ordinary partitioner placement
+(:func:`repro.device.partition.place_on_banks`) and spliced into a live
+:class:`~repro.core.engine.EngineSession` — so tenants contend for bank
+tokens, shared buses, and (with a :class:`~repro.core.engine.RefreshSpec`)
+refresh windows through exactly the machinery the offline scheduler uses.
+The driver advances the session between arrival horizons, releases leases
+as jobs complete, and reports per-job latency.
+
+Determinism: the same (trace, geometry, interconnect, admission policy,
+refresh) always produces the same per-job completion times — there is no
+wall clock anywhere in the stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core import ir, taskgraph
+from repro.core.engine import EngineSession, RefreshSpec
+from repro.core.ir import TaskGraph
+from repro.core.pluto import Interconnect
+from repro.device.geometry import DeviceGeometry
+from repro.device.resources import DeviceModel
+from repro.device import partition
+from repro.runtime.allocator import BankAllocator, Lease
+from repro.runtime.trace import ClosedLoopSource, JobRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class JobResult:
+    """One served job: who, when, and how long it waited."""
+
+    tenant: str
+    app: str
+    seq: int
+    arrival_ns: float
+    admit_ns: float              # lease granted / graph spliced
+    finish_ns: float
+    banks: tuple[int, ...]
+    n_tasks: int
+
+    @property
+    def latency_ns(self) -> float:
+        return self.finish_ns - self.arrival_ns
+
+    @property
+    def queue_ns(self) -> float:
+        return self.admit_ns - self.arrival_ns
+
+    @property
+    def service_ns(self) -> float:
+        return self.finish_ns - self.admit_ns
+
+
+class ServingRuntime:
+    """Streaming multi-tenant serving over one device (see module docstring).
+
+    One runtime = one device under one interconnect, one admission policy,
+    and optionally one refresh spec.  ``run`` consumes an open-loop trace
+    (a list of requests), a :class:`ClosedLoopSource`, or both.
+    """
+
+    def __init__(self, mode: Interconnect, geom: DeviceGeometry, *,
+                 admission: str = "fifo",
+                 placement: str = "locality_first",
+                 refresh: RefreshSpec | None = None,
+                 model: DeviceModel | None = None):
+        if model is None:
+            model = DeviceModel(mode, geom)
+        self.mode = mode
+        self.geom = geom
+        self.placement = placement
+        self.session = EngineSession(model, refresh=refresh)
+        self.allocator = BankAllocator(geom, admission)
+        self.results: list[JobResult] = []
+        self._graphs: dict = {}      # (app, kw, banks) -> materialized graph
+        self._live: dict = {}        # engine job id -> (request, lease, at)
+
+    # --- job graphs -------------------------------------------------------------
+
+    def _graph(self, req: JobRequest, banks: tuple[int, ...]) -> TaskGraph:
+        t = req.tenant
+        key = (t.app, t.kw, banks)
+        g = self._graphs.get(key)
+        if g is None:
+            struct = taskgraph.structural(
+                t.app, n_pes=len(banks) * self.geom.pes_per_bank, **t.kwargs)
+            placed = partition.place_on_banks(struct, self.geom, banks,
+                                              self.placement)
+            g = self._graphs[key] = ir.materialize(placed, self.mode)
+        return g
+
+    def job_cost(self, req: JobRequest) -> float:
+        """SJF cost estimate: the job graph's task count (size proxy that
+        needs no placement, so queued jobs are priced before any lease)."""
+        t = req.tenant
+        return float(taskgraph.structural(
+            t.app, n_pes=t.banks * self.geom.pes_per_bank, **t.kwargs).n)
+
+    # --- the serving loop -------------------------------------------------------
+
+    def run(self, requests=(), *, closed: ClosedLoopSource | None = None
+            ) -> list[JobResult]:
+        """Serve every request to completion; returns per-job results.
+
+        ``requests`` come from :func:`~repro.runtime.trace.open_loop_trace`
+        (or any JobRequest iterable); ``closed`` adds a closed-loop source
+        whose follow-up arrivals are generated as completions land.
+        """
+        pending: list[tuple] = []
+        for r in requests:
+            heapq.heappush(pending, (*r.sort_key, r))
+        if closed is not None:
+            for r in closed.initial():
+                heapq.heappush(pending, (*r.sort_key, r))
+        for _, _, _, r in pending:
+            if r.tenant.banks > self.geom.n_banks:
+                raise ValueError(
+                    f"tenant {r.tenant.name!r} wants {r.tenant.banks} banks; "
+                    f"device has {self.geom.n_banks}")
+
+        first = len(self.results)
+        while True:
+            until = pending[0][0] if pending else None
+            # with jobs queued for banks, stop at the first completion so
+            # the freed lease re-admits before more schedule is committed
+            done = self.session.advance(
+                until, stop_on_completion=self.allocator.n_queued > 0)
+            if done:
+                # replay completions in finish order, admitting arrivals
+                # that land before each release so queue order is causal
+                done.sort(key=lambda jid: (self.session.job(jid).finish_ns,
+                                           jid))
+                for jid in done:
+                    req, lease, _at = self._live.pop(jid)
+                    rec = self.session.job(jid)
+                    while pending and pending[0][0] <= rec.finish_ns:
+                        self._submit(heapq.heappop(pending)[3])
+                    self.results.append(JobResult(
+                        req.tenant.name, req.tenant.app, req.seq,
+                        req.arrival_ns, rec.admit_ns, rec.finish_ns,
+                        lease.banks, rec.n_tasks))
+                    if closed is not None:
+                        nxt = closed.on_complete(req, rec.finish_ns)
+                        if nxt is not None:
+                            heapq.heappush(pending, (*nxt.sort_key, nxt))
+                    for granted in self.allocator.release(lease):
+                        self._start(granted, now=rec.finish_ns)
+                continue
+            if until is None:
+                if self.allocator.n_queued:
+                    raise RuntimeError(
+                        "device drained with jobs still queued — allocator "
+                        "and session disagree about capacity")
+                break
+            # no completion before the horizon: admit everything arriving
+            # at it, then re-advance
+            while pending and pending[0][0] <= until:
+                self._submit(heapq.heappop(pending)[3])
+        return self.results[first:]
+
+    def _submit(self, req: JobRequest) -> None:
+        for granted in self.allocator.request(
+                req.tenant.banks, priority=req.tenant.priority,
+                cost=self.job_cost(req), payload=req):
+            self._start(granted, now=req.arrival_ns)
+
+    def _start(self, lease: Lease, now: float) -> None:
+        req: JobRequest = lease.payload
+        at = now if now > req.arrival_ns else req.arrival_ns
+        g = self._graph(req, lease.banks)
+        jid = self.session.admit(g, at=at)
+        self._live[jid] = (req, lease, at)
+
+
+# --- latency / throughput summaries ---------------------------------------------
+
+
+def summarize(results, *, percentiles=(50.0, 95.0, 99.0)) -> dict:
+    """Throughput and latency percentiles over a batch of job results."""
+    if not results:
+        return {"n_jobs": 0, "throughput_jps": 0.0, "latency_ns": {},
+                "mean_queue_ns": 0.0, "makespan_ns": 0.0, "per_tenant": {}}
+    lat = np.asarray([r.latency_ns for r in results], dtype=np.float64)
+    queue = np.asarray([r.queue_ns for r in results], dtype=np.float64)
+    t0 = min(r.arrival_ns for r in results)
+    t1 = max(r.finish_ns for r in results)
+    span = t1 - t0
+    per_tenant: dict = {}
+    for r in results:
+        per_tenant.setdefault(r.tenant, []).append(r.latency_ns)
+    return {
+        "n_jobs": len(results),
+        "throughput_jps": len(results) / span * 1e9 if span > 0 else 0.0,
+        "latency_ns": {f"p{p:g}": float(np.percentile(lat, p))
+                       for p in percentiles},
+        "mean_latency_ns": float(lat.mean()),
+        "mean_queue_ns": float(queue.mean()),
+        "makespan_ns": t1,
+        "per_tenant": {
+            name: {"n_jobs": len(ls),
+                   "p99_ns": float(np.percentile(np.asarray(ls), 99.0))}
+            for name, ls in sorted(per_tenant.items())},
+    }

@@ -1,0 +1,167 @@
+"""Workload traces for the online serving runtime.
+
+The serving simulator consumes *job streams* rather than one closed task
+graph: each :class:`JobRequest` names a tenant, the tenant names one of the
+five paper apps (mm / pmm / ntt / bfs / dfs) with a problem size, a bank
+demand, and a priority.  Two arrival disciplines are modeled:
+
+* **open loop** (:func:`open_loop_trace`): every tenant is an independent
+  Poisson process — arrivals keep coming whether or not the device keeps
+  up, which is what exposes queueing collapse past saturation (the regime
+  where LISA's circuit-switched moves cost it sustainable load);
+* **closed loop** (:class:`ClosedLoopSource`): every tenant holds a fixed
+  number of jobs in flight and issues the next one a think time after a
+  completion — throughput self-limits to the service rate, the classic
+  interactive-user model.
+
+Everything is deterministic: arrivals derive from
+``numpy.random.default_rng((seed, tenant_index))``, so a trace is a pure
+function of (tenant list, seed, load) — the serving benchmarks replay the
+*identical* arrival sequence under both interconnects and every admission
+policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: the five Fig-8 applications a tenant may run
+TRACE_APPS = ("mm", "pmm", "ntt", "bfs", "dfs")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant: an app, a problem size, a bank demand, and traffic shape.
+
+    ``kw`` holds the app builder kwargs as sorted items (hashable, like
+    :class:`repro.device.batch.SweepConfig`); build with :meth:`make`.
+    """
+
+    name: str
+    app: str
+    kw: tuple = ()
+    rate_jps: float = 50.0       # open-loop Poisson arrival rate (jobs/s)
+    priority: int = 0            # larger = more urgent (admission policy)
+    banks: int = 1               # banks leased per job
+    concurrency: int = 1         # closed-loop jobs kept in flight
+    think_ns: float = 0.0        # closed-loop mean think time
+
+    @classmethod
+    def make(cls, name: str, app: str, *, rate_jps: float = 50.0,
+             priority: int = 0, banks: int = 1, concurrency: int = 1,
+             think_ns: float = 0.0, **kw) -> "TenantSpec":
+        if app not in TRACE_APPS:
+            raise ValueError(f"unknown app {app!r}; pick one of {TRACE_APPS}")
+        if rate_jps < 0 or banks < 1 or concurrency < 1 or think_ns < 0:
+            raise ValueError(
+                f"invalid tenant shape for {name!r}: rate_jps={rate_jps}, "
+                f"banks={banks}, concurrency={concurrency}, "
+                f"think_ns={think_ns}")
+        return cls(name, app, tuple(sorted(kw.items())), rate_jps, priority,
+                   banks, concurrency, think_ns)
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.kw)
+
+    def scaled(self, load: float) -> "TenantSpec":
+        """This tenant with its open-loop rate multiplied by ``load``."""
+        return dataclasses.replace(self, rate_jps=self.rate_jps * load)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRequest:
+    """One job arrival of a tenant's stream."""
+
+    arrival_ns: float
+    tenant: TenantSpec
+    seq: int                     # per-tenant sequence number
+
+    @property
+    def sort_key(self) -> tuple:
+        # total order: simultaneous arrivals break by tenant name then seq,
+        # never by object identity
+        return (self.arrival_ns, self.tenant.name, self.seq)
+
+
+def _tenant_rng(seed: int, index: int) -> np.random.Generator:
+    return np.random.default_rng((seed, index))
+
+
+def open_loop_trace(tenants, *, jobs_per_tenant: int | None = None,
+                    horizon_ns: float | None = None, seed: int = 0,
+                    load: float = 1.0) -> list[JobRequest]:
+    """Merged Poisson arrival streams, one per tenant, sorted by arrival.
+
+    Exactly one of ``jobs_per_tenant`` (fixed-count streams, the benchmark
+    default — every load level completes the same job population) or
+    ``horizon_ns`` (fixed-window streams) bounds the trace.  ``load``
+    scales every tenant's rate, leaving the per-tenant mix intact.
+    """
+    if (jobs_per_tenant is None) == (horizon_ns is None):
+        raise ValueError(
+            "exactly one of jobs_per_tenant / horizon_ns must be given")
+    out: list[JobRequest] = []
+    for ti, t in enumerate(tenants):
+        rate = t.rate_jps * load
+        if rate <= 0.0:
+            continue
+        rng = _tenant_rng(seed, ti)
+        mean_ns = 1e9 / rate
+        ts = 0.0
+        seq = 0
+        while True:
+            if jobs_per_tenant is not None and seq >= jobs_per_tenant:
+                break
+            ts += float(rng.exponential(mean_ns))
+            if horizon_ns is not None and ts >= horizon_ns:
+                break
+            out.append(JobRequest(ts, t, seq))
+            seq += 1
+    out.sort(key=lambda r: r.sort_key)
+    return out
+
+
+class ClosedLoopSource:
+    """Fixed-concurrency tenants: each completion issues the next arrival.
+
+    Every tenant starts ``concurrency`` jobs at t=0 and replaces each
+    completed job after an exponential think time (mean ``think_ns``; zero
+    means immediate re-issue), until its ``jobs_per_tenant`` budget is
+    spent.  Deterministic per (tenants, seed).
+    """
+
+    def __init__(self, tenants, *, jobs_per_tenant: int, seed: int = 0):
+        if jobs_per_tenant < 1:
+            raise ValueError("jobs_per_tenant must be >= 1")
+        self._tenants = list(tenants)
+        self._rngs = {t.name: _tenant_rng(seed, i)
+                      for i, t in enumerate(self._tenants)}
+        self._issued = {t.name: 0 for t in self._tenants}
+        self._budget = jobs_per_tenant
+
+    def initial(self) -> list[JobRequest]:
+        """The t=0 arrivals: ``concurrency`` jobs per tenant."""
+        out = []
+        for t in self._tenants:
+            for _ in range(min(t.concurrency, self._budget)):
+                out.append(self._issue(t, 0.0))
+        out.sort(key=lambda r: r.sort_key)
+        return out
+
+    def on_complete(self, req: JobRequest, now_ns: float
+                    ) -> JobRequest | None:
+        """The follow-up arrival for a completed job (None when spent)."""
+        t = req.tenant
+        if self._issued[t.name] >= self._budget:
+            return None
+        think = float(self._rngs[t.name].exponential(t.think_ns)) \
+            if t.think_ns > 0.0 else 0.0
+        return self._issue(t, now_ns + think)
+
+    def _issue(self, t: TenantSpec, at: float) -> JobRequest:
+        seq = self._issued[t.name]
+        self._issued[t.name] = seq + 1
+        return JobRequest(at, t, seq)

@@ -80,6 +80,36 @@ class TestBatchRunner:
         assert taskgraph._matmul_struct.cache_info().currsize == 0
 
 
+class TestBatchEdgeCases:
+    def test_empty_config_list_returns_empty(self):
+        assert BatchRunner().run([]) == []
+        assert dbatch.run_grid([]) == []
+
+    def test_empty_config_list_with_callback(self):
+        seen = []
+        assert BatchRunner().run([], callback=lambda c, r: seen.append(c)) \
+            == []
+        assert seen == []
+
+    def test_duplicate_configs_one_result_per_cell(self):
+        cfg = SweepConfig.make("mm", Interconnect.LISA, GEOM, n=12)
+        res = BatchRunner().run([cfg, cfg, cfg])
+        assert len(res) == 3
+        for f in FIELDS:
+            assert getattr(res[1], f) == getattr(res[0], f), f
+            assert getattr(res[2], f) == getattr(res[0], f), f
+
+    def test_duplicate_configs_share_caches(self):
+        dbatch.clear_caches()
+        cfg = SweepConfig.make("mm", Interconnect.SHARED_PIM, GEOM, n=12)
+        runner = BatchRunner()
+        runner.run([cfg, cfg])
+        # dedup in the shared caches: one placed structure, one model
+        assert partition._partitioned_struct.cache_info().currsize == 1
+        assert taskgraph._matmul_struct.cache_info().currsize == 1
+        assert len(runner._models) == 1
+
+
 class TestSweepBenchmarkWiring:
     def test_build_grid_covers_axes(self):
         from benchmarks.sweep import APP_KW_SMOKE, build_grid

@@ -1,0 +1,49 @@
+"""benchmarks/run.py artifact consolidation: headline metrics + guards."""
+
+import json
+
+from benchmarks.run import summarize_bench_artifacts
+
+
+def write(tmp_path, name, data):
+    (tmp_path / name).write_text(json.dumps(data))
+
+
+def test_collects_headlines_and_guard_verdicts(tmp_path):
+    write(tmp_path, "BENCH_sweep.json",
+          {"speedup": 5.5, "bit_for_bit_identical": True, "failures": []})
+    write(tmp_path, "BENCH_device.json",
+          {"monotone_ok": True, "sweep": [{"improvement": 0.4},
+                                          {"improvement": 0.7}]})
+    write(tmp_path, "BENCH_serving.json",
+          {"guard_ok": True, "failures": [], "session_matches_offline": True,
+           "sustained_load": {"shared_pim": {"fifo": 1.5, "sjf": 1.2}}})
+    rows = {r["name"]: r for r in summarize_bench_artifacts(tmp_path)}
+    assert rows["BENCH_sweep"]["value"] == 5.5
+    assert rows["BENCH_device"]["value"] == 0.7
+    assert rows["BENCH_serving"]["value"] == 1.5
+    assert all(r["guard"] == "PASS" for r in rows.values())
+
+
+def test_failed_guard_is_flagged(tmp_path):
+    write(tmp_path, "BENCH_sweep.json",
+          {"speedup": 9.9, "bit_for_bit_identical": True,
+           "failures": ["speedup below bar"]})
+    write(tmp_path, "BENCH_device.json", {"monotone_ok": False, "sweep": []})
+    rows = {r["name"]: r for r in summarize_bench_artifacts(tmp_path)}
+    assert rows["BENCH_sweep"]["guard"] == "FAIL"
+    assert rows["BENCH_device"]["guard"] == "FAIL"
+
+
+def test_unknown_and_unreadable_artifacts(tmp_path):
+    write(tmp_path, "BENCH_custom.json", {"whatever": 1})
+    (tmp_path / "BENCH_broken.json").write_text("{not json")
+    rows = {r["name"]: r for r in summarize_bench_artifacts(tmp_path)}
+    assert rows["BENCH_custom"]["guard"] == "NONE"
+    assert rows["BENCH_broken"]["guard"] == "UNREADABLE"
+
+
+def test_repo_artifacts_are_green():
+    """The committed BENCH_*.json must never record a failed guard."""
+    for row in summarize_bench_artifacts():
+        assert row["guard"] in ("PASS", "NONE"), row

@@ -1,0 +1,278 @@
+"""EngineSession: incremental scheduling, refresh claims, engine invariance.
+
+Pins the tentpole contracts of the session refactor:
+
+* a zero-refresh single-tenant session admitting one graph reproduces
+  ``engine.run`` (and therefore the offline shims) **bit-for-bit**;
+* uid-offset splicing keeps multi-job sessions collision-free and
+  deterministic;
+* ``advance(until)`` defers work that becomes ready at/after the horizon;
+* refresh claims occupy bank tokens (makespans can only grow) and vanish
+  when no spec is given;
+* order-preserving uid relabeling is a pure renaming: every schedule
+  observable is unchanged, only the finish-time keys shift.
+"""
+
+import dataclasses
+
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+
+from repro.core import engine, ir, taskgraph
+from repro.core.engine import BankModel, EngineSession, RefreshSpec
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task, schedule
+from repro.device import DeviceGeometry
+from repro.device.partition import build_partitioned_ir
+from repro.device.resources import DeviceModel
+
+GEOM = DeviceGeometry(channels=2, banks_per_channel=2)
+
+STAT_FIELDS = ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns",
+               "n_ops", "n_moves", "n_rows_moved", "n_cross_moves",
+               "energy_j", "rows_by_route", "bus_busy_ns", "finish_times")
+
+
+def chain_tasks(n=4, pe=0, dur=10.0, uid0=0):
+    return [Task(uid0 + i, "op", deps=(uid0 + i - 1,) if i else (),
+                 pe=pe, duration=dur) for i in range(n)]
+
+
+class TestSessionEqualsRun:
+    """One admit at t=0, full advance == engine.run, bit for bit."""
+
+    @pytest.mark.parametrize("app,kw", [("mm", dict(n=20)),
+                                        ("ntt", dict(n=64)),
+                                        ("bfs", dict(n_nodes=40))])
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_bank_model(self, app, kw, mode):
+        g = taskgraph.build_ir(app, mode, **kw)
+        want = engine.run(g, BankModel(mode))
+        s = EngineSession(BankModel(mode))
+        s.admit(g)
+        s.advance()
+        got = s.stats()
+        for f in STAT_FIELDS:
+            assert getattr(got, f) == getattr(want, f), f
+        assert got.refresh_ns == 0.0
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    @pytest.mark.parametrize("policy", ["locality_first", "round_robin"])
+    def test_device_model(self, mode, policy):
+        g = build_partitioned_ir("pmm", mode, GEOM, policy=policy, n=20)
+        want = engine.run(g, DeviceModel(mode, GEOM))
+        s = EngineSession(DeviceModel(mode, GEOM))
+        s.admit(g)
+        s.advance()
+        got = s.stats()
+        for f in STAT_FIELDS:
+            assert getattr(got, f) == getattr(want, f), f
+
+    def test_job_record_tracks_completion(self):
+        g = taskgraph.build_ir("mm", Interconnect.LISA, n=10)
+        s = EngineSession(BankModel(Interconnect.LISA))
+        jid = s.admit(g)
+        assert not s.job(jid).done
+        assert s.advance() == [jid]
+        rec = s.job(jid)
+        assert rec.done and rec.n_tasks == g.n
+        assert rec.finish_ns == s.stats().makespan_ns
+
+
+class TestMultiJobSessions:
+    def test_uid_offsets_keep_jobs_apart(self):
+        g = taskgraph.build_ir("mm", Interconnect.LISA, n=8)
+        s = EngineSession(BankModel(Interconnect.LISA))
+        a = s.admit(g)
+        b = s.admit(g)
+        s.advance()
+        assert s.job(a).uid_offset == 0
+        assert s.job(b).uid_offset == g.n
+        assert len(s.stats().finish_times) == 2 * g.n
+
+    def test_two_jobs_on_disjoint_pes_dont_interact(self):
+        t1 = chain_tasks(pe=0, uid0=0)
+        t2 = chain_tasks(pe=5, uid0=100)
+        s = EngineSession(BankModel(Interconnect.LISA))
+        s.admit(ir.from_tasks(t1))
+        s.admit(ir.from_tasks(t2), at=0.0, uid_offset=0)
+        s.advance()
+        ft = s.stats().finish_times
+        alone = schedule(t1, Interconnect.LISA).finish_times
+        assert {u: ft[u] for u in alone} == alone
+        assert ft[103] == 40.0
+
+    def test_same_pe_jobs_serialize(self):
+        s = EngineSession(BankModel(Interconnect.LISA))
+        s.admit(ir.from_tasks(chain_tasks(n=2, pe=0, uid0=0)))
+        s.admit(ir.from_tasks(chain_tasks(n=2, pe=0, uid0=10)))
+        s.advance()
+        ft = s.stats().finish_times
+        # four 10 ns ops contending for one PE: total occupancy 40 ns
+        assert max(ft.values()) == 40.0
+
+    def test_late_admission_starts_no_earlier_than_admit_time(self):
+        s = EngineSession(BankModel(Interconnect.SHARED_PIM))
+        s.admit(ir.from_tasks(chain_tasks(n=1, pe=0)))
+        s.advance()
+        jid = s.admit(ir.from_tasks(chain_tasks(n=1, pe=0, uid0=50)),
+                      at=1000.0)
+        s.advance()
+        assert s.job(jid).finish_ns == 1010.0
+
+    def test_empty_graph_job_completes_immediately(self):
+        s = EngineSession(BankModel(Interconnect.LISA))
+        jid = s.admit(ir.GraphBuilder().build(), at=7.0)
+        assert s.advance() == [jid]
+        assert s.job(jid).done and s.job(jid).finish_ns == 7.0
+
+
+class TestHorizons:
+    def test_advance_defers_tasks_ready_at_horizon(self):
+        s = EngineSession(BankModel(Interconnect.LISA))
+        jid = s.admit(ir.from_tasks(chain_tasks(n=3, dur=10.0)))
+        assert s.advance(until=15.0) == []
+        # first op (ready 0) ran; second (ready 10) ran; third (ready 20)
+        # is past the horizon
+        assert s.n_pending_tasks == 1
+        assert s.now == 15.0
+        assert s.advance() == [jid]
+        assert s.job(jid).finish_ns == 30.0
+
+    def test_horizon_schedule_matches_one_shot(self):
+        g = taskgraph.build_ir("ntt", Interconnect.SHARED_PIM, n=64)
+        want = engine.run(g, BankModel(Interconnect.SHARED_PIM))
+        s = EngineSession(BankModel(Interconnect.SHARED_PIM))
+        s.admit(g)
+        horizon = 0.0
+        while s.n_pending_tasks:
+            horizon += want.makespan_ns / 7.0
+            s.advance(until=horizon)
+        assert s.stats().finish_times == want.finish_times
+
+    def test_stop_on_completion_returns_early(self):
+        s = EngineSession(BankModel(Interconnect.LISA))
+        a = s.admit(ir.from_tasks(chain_tasks(n=1, pe=0, dur=100.0)))
+        s.admit(ir.from_tasks(chain_tasks(n=3, pe=1, uid0=10)))
+        # job a's single op carries the larger critical path, so it runs
+        # (and completes) first; the early exit leaves job b in flight
+        assert s.advance(stop_on_completion=True) == [a]
+        assert s.n_pending_tasks > 0
+        s.advance()
+        assert s.n_pending_tasks == 0
+
+    def test_deadlock_raises(self):
+        import numpy as np
+        # a 2-cycle, hand-built to dodge the validator (validate=False)
+        g = ir.TaskGraph(
+            uids=np.arange(2), kinds=np.zeros(2, np.int8),
+            dep_indptr=np.asarray([0, 1, 2]), dep_pos=np.asarray([1, 0]),
+            duration=np.ones(2), op_class=np.full(2, -1, np.int16),
+            pe=np.zeros(2, np.int64),
+            src=np.full(2, ir.NONE_SENTINEL, np.int64),
+            dst_indptr=np.zeros(3, np.int64),
+            dst_flat=np.zeros(0, np.int64),
+            dst_is_tuple=np.zeros(2, bool), rows=np.ones(2, np.int64))
+        s = EngineSession(BankModel(Interconnect.LISA), validate=False)
+        s.admit(g)
+        with pytest.raises(RuntimeError, match="deadlock"):
+            s.advance()
+
+
+class TestRefresh:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            RefreshSpec(interval_ns=0.0)
+        with pytest.raises(ValueError):
+            RefreshSpec(interval_ns=100.0, duration_ns=100.0)
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_refresh_occupies_tokens(self, mode):
+        g = taskgraph.build_ir("mm", mode, n=20)
+        base = engine.run(g, BankModel(mode)).makespan_ns
+        s = EngineSession(BankModel(mode),
+                          refresh=RefreshSpec(interval_ns=2000.0,
+                                              duration_ns=400.0))
+        s.admit(g)
+        s.advance()
+        got = s.stats()
+        assert got.refresh_ns > 0.0
+        assert got.makespan_ns > base
+        # claims only delay; work totals are untouched
+        assert got.op_busy_ns == engine.run(g, BankModel(mode)).op_busy_ns
+
+    def test_device_refresh_units_are_per_bank(self):
+        m = DeviceModel(Interconnect.SHARED_PIM, GEOM)
+        units = m.refresh_units()
+        assert len(units) == GEOM.n_banks
+        flat = [t for u in units for t in u]
+        assert len(set(flat)) == len(flat)           # disjoint
+        assert max(flat) < m.n_resources()           # bus tokens excluded
+
+    def test_zero_refresh_session_is_bit_for_bit(self):
+        g = build_partitioned_ir("bfs", Interconnect.SHARED_PIM, GEOM,
+                                 n_nodes=40)
+        want = engine.run(g, DeviceModel(Interconnect.SHARED_PIM, GEOM))
+        s = EngineSession(DeviceModel(Interconnect.SHARED_PIM, GEOM),
+                          refresh=None)
+        s.admit(g)
+        s.advance()
+        assert s.stats() == want
+
+
+# --- satellite: engine invariance under uid relabeling --------------------------
+
+
+@st.composite
+def random_bank_dag(draw):
+    n = draw(st.integers(2, 25))
+    tasks = []
+    for i in range(n):
+        deps = tuple(d for d in range(max(0, i - 4), i)
+                     if draw(st.booleans()))
+        if draw(st.booleans()):
+            tasks.append(Task(i, "op", deps=deps,
+                              pe=draw(st.integers(0, 15)),
+                              duration=draw(st.floats(1.0, 1e4))))
+        else:
+            src = draw(st.integers(0, 15))
+            dst = draw(st.integers(0, 15).filter(lambda d: d != src))
+            tasks.append(Task(i, "move", deps=deps, src=src, dst=dst,
+                              rows=draw(st.integers(1, 8))))
+    return tasks
+
+
+def shift_uids(tasks, k):
+    return [dataclasses.replace(t, uid=t.uid + k,
+                                deps=tuple(d + k for d in t.deps))
+            for t in tasks]
+
+
+class TestUidRelabelInvariance:
+    """Order-preserving uid shifts are pure renamings of the schedule."""
+
+    @hypothesis.given(random_bank_dag(), st.integers(1, 10**6),
+                      st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_shifted_uids_same_schedule(self, tasks, k, mode):
+        a = schedule(tasks, mode)
+        b = schedule(shift_uids(tasks, k), mode)
+        assert b.makespan_ns == a.makespan_ns
+        assert b.op_busy_ns == a.op_busy_ns
+        assert b.move_busy_ns == a.move_busy_ns
+        assert b.stall_ns == a.stall_ns
+        assert b.transfer_energy_j == a.transfer_energy_j
+        assert {u + k: f for u, f in a.finish_times.items()} \
+            == b.finish_times
+
+    @hypothesis.given(random_bank_dag(), st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_session_matches_run_on_random_graphs(self, tasks, mode):
+        """Satellite: zero-refresh single-tenant session == run()."""
+        g = ir.from_tasks(tasks)
+        want = engine.run(g, BankModel(mode))
+        s = EngineSession(BankModel(mode))
+        s.admit(g)
+        s.advance()
+        assert s.stats() == want

@@ -1,0 +1,247 @@
+"""Serving runtime: traces, bank leasing, and the end-to-end driver."""
+
+import pytest
+
+from repro.core.engine import RefreshSpec
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry
+from repro.device.partition import lease_pe_map, place_on_banks
+from repro.core import taskgraph
+from repro.runtime import (ADMISSION_POLICIES, BankAllocator,
+                           ClosedLoopSource, ServingRuntime, TenantSpec,
+                           open_loop_trace, summarize)
+
+GEOM = DeviceGeometry(channels=1, banks_per_channel=4)
+
+
+def tenants(rate=2000.0):
+    return [
+        TenantSpec.make("mm", "mm", n=16, banks=2, rate_jps=rate),
+        TenantSpec.make("bfs", "bfs", n_nodes=30, priority=2,
+                        rate_jps=rate),
+        TenantSpec.make("ntt", "ntt", n=16, rate_jps=rate),
+    ]
+
+
+class TestTrace:
+    def test_deterministic_in_seed(self):
+        a = open_loop_trace(tenants(), jobs_per_tenant=5, seed=3)
+        b = open_loop_trace(tenants(), jobs_per_tenant=5, seed=3)
+        c = open_loop_trace(tenants(), jobs_per_tenant=5, seed=4)
+        assert [r.sort_key for r in a] == [r.sort_key for r in b]
+        assert [r.sort_key for r in a] != [r.sort_key for r in c]
+
+    def test_sorted_and_counted(self):
+        tr = open_loop_trace(tenants(), jobs_per_tenant=7, seed=0)
+        assert len(tr) == 21
+        arrivals = [r.arrival_ns for r in tr]
+        assert arrivals == sorted(arrivals)
+        for name in ("mm", "bfs", "ntt"):
+            assert sum(r.tenant.name == name for r in tr) == 7
+
+    def test_load_scales_rates(self):
+        slow = open_loop_trace(tenants(), jobs_per_tenant=20, seed=0,
+                               load=0.5)
+        fast = open_loop_trace(tenants(), jobs_per_tenant=20, seed=0,
+                               load=2.0)
+        assert fast[-1].arrival_ns < slow[-1].arrival_ns
+
+    def test_horizon_bound(self):
+        tr = open_loop_trace(tenants(), horizon_ns=1e6, seed=0)
+        assert all(r.arrival_ns < 1e6 for r in tr)
+
+    def test_exactly_one_bound_required(self):
+        with pytest.raises(ValueError):
+            open_loop_trace(tenants(), seed=0)
+        with pytest.raises(ValueError):
+            open_loop_trace(tenants(), jobs_per_tenant=2, horizon_ns=1.0)
+
+    def test_closed_loop_budget_and_determinism(self):
+        ts = [TenantSpec.make("mm", "mm", n=16, concurrency=2,
+                              think_ns=50.0)]
+        src = ClosedLoopSource(ts, jobs_per_tenant=5, seed=1)
+        first = src.initial()
+        assert len(first) == 2 and all(r.arrival_ns == 0.0 for r in first)
+        seen = list(first)
+        while True:
+            nxt = src.on_complete(seen[-1], seen[-1].arrival_ns + 100.0)
+            if nxt is None:
+                break
+            seen.append(nxt)
+        assert len(seen) == 5
+        assert [r.seq for r in seen] == list(range(5))
+
+
+class TestLeaseMap:
+    def test_identity_on_full_contiguous_lease(self):
+        m = lease_pe_map(GEOM, range(GEOM.n_banks))
+        assert m == list(range(GEOM.total_pes))
+
+    def test_maps_into_leased_banks_only(self):
+        banks = (1, 3)
+        m = lease_pe_map(GEOM, banks)
+        ppb = GEOM.pes_per_bank
+        assert {p // ppb for p in m} == set(banks)
+        assert len(set(m)) == len(m) == len(banks) * ppb
+
+    def test_rejects_bad_leases(self):
+        with pytest.raises(ValueError):
+            lease_pe_map(GEOM, [])
+        with pytest.raises(ValueError):
+            lease_pe_map(GEOM, [0, 0])
+        with pytest.raises(ValueError):
+            lease_pe_map(GEOM, [99])
+
+    def test_place_on_banks_confines_graph(self):
+        g = taskgraph.structural("mm", n_pes=2 * GEOM.pes_per_bank, n=12)
+        placed = place_on_banks(g, GEOM, (2, 3))
+        ppb = GEOM.pes_per_bank
+        pes = set(placed.pe[placed.pe >= 0].tolist()) \
+            | set(placed.src[placed.src >= 0].tolist()) \
+            | set(placed.dst_flat.tolist())
+        assert {p // ppb for p in pes} <= {2, 3}
+
+
+class TestAllocator:
+    def test_grant_release_roundtrip(self):
+        al = BankAllocator(GEOM, "fifo")
+        leases = al.request(3, payload="a")
+        assert len(leases) == 1 and leases[0].banks == (0, 1, 2)
+        assert al.n_free == 1
+        assert al.request(2, payload="b") == []       # queued
+        granted = al.release(leases[0])
+        assert [ls.payload for ls in granted] == ["b"]
+        assert al.n_free == 2
+
+    def test_contiguous_preference(self):
+        al = BankAllocator(GEOM, "fifo")
+        a = al.request(1)[0]
+        b = al.request(1)[0]
+        assert (a.banks, b.banks) == ((0,), (1,))
+        al.release(a)                                 # free: {0, 2, 3}
+        c = al.request(2)[0]
+        assert c.banks == (2, 3)                      # contiguous beats low
+
+    def test_fifo_head_of_line_blocks(self):
+        al = BankAllocator(GEOM, "fifo")
+        big = al.request(4)[0]
+        assert al.request(4, payload="jumbo") == []
+        assert al.request(1, payload="tiny") == []    # behind jumbo
+        granted = al.release(big)
+        assert [ls.payload for ls in granted] == ["jumbo"]
+
+    def test_sjf_reorders_by_cost(self):
+        al = BankAllocator(GEOM, "sjf")
+        lease = al.request(4, cost=1.0)[0]
+        al.request(2, cost=50.0, payload="slow")
+        al.request(2, cost=5.0, payload="quick")
+        granted = al.release(lease)
+        assert [ls.payload for ls in granted] == ["quick", "slow"]
+
+    def test_priority_order_then_fifo(self):
+        al = BankAllocator(GEOM, "priority")
+        lease = al.request(4, priority=0)[0]
+        al.request(1, priority=0, payload="low")
+        al.request(1, priority=5, payload="hi")
+        al.request(1, priority=5, payload="hi2")
+        granted = al.release(lease)
+        assert [ls.payload for ls in granted] == ["hi", "hi2", "low"]
+
+    def test_rejects_oversized_and_double_release(self):
+        al = BankAllocator(GEOM, "fifo")
+        with pytest.raises(ValueError):
+            al.request(5)
+        lease = al.request(1)[0]
+        al.release(lease)
+        with pytest.raises(ValueError):
+            al.release(lease)
+        with pytest.raises(ValueError):
+            BankAllocator(GEOM, "lifo")
+
+
+class TestServingRuntime:
+    def trace(self, n=6, seed=0):
+        return open_loop_trace(tenants(), jobs_per_tenant=n, seed=seed)
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_serves_every_job_causally(self, mode):
+        tr = self.trace()
+        rt = ServingRuntime(mode, GEOM)
+        res = rt.run(tr)
+        assert len(res) == len(tr)
+        for r in res:
+            assert r.finish_ns >= r.admit_ns >= r.arrival_ns
+            assert set(r.banks) <= set(range(GEOM.n_banks))
+
+    def test_deterministic_replay(self):
+        a = ServingRuntime(Interconnect.SHARED_PIM, GEOM).run(self.trace())
+        b = ServingRuntime(Interconnect.SHARED_PIM, GEOM).run(self.trace())
+        assert a == b
+
+    @pytest.mark.parametrize("policy", ADMISSION_POLICIES)
+    def test_policies_serve_identical_job_sets(self, policy):
+        tr = self.trace()
+        res = ServingRuntime(Interconnect.SHARED_PIM, GEOM,
+                             admission=policy).run(tr)
+        assert sorted((r.tenant, r.seq) for r in res) \
+            == sorted((r.tenant.name, r.seq) for r in tr)
+
+    def test_shared_pim_latency_beats_lisa(self):
+        tr = self.trace(n=8)
+        lat = {}
+        for mode in Interconnect:
+            s = summarize(ServingRuntime(mode, GEOM).run(tr))
+            lat[mode] = s["latency_ns"]["p99"]
+        assert lat[Interconnect.SHARED_PIM] < lat[Interconnect.LISA]
+
+    def test_refresh_only_adds_latency(self):
+        tr = self.trace(n=4)
+        base = summarize(ServingRuntime(Interconnect.SHARED_PIM, GEOM)
+                         .run(tr))
+        spec = RefreshSpec(interval_ns=3000.0, duration_ns=500.0)
+        rt = ServingRuntime(Interconnect.SHARED_PIM, GEOM, refresh=spec)
+        with_r = summarize(rt.run(tr))
+        assert rt.session.stats().refresh_ns > 0.0
+        assert with_r["mean_latency_ns"] >= base["mean_latency_ns"]
+
+    def test_priority_admission_helps_urgent_tenant_under_load(self):
+        # saturate the device so the queue is never empty, then compare the
+        # urgent tenant's p99 under fifo vs priority admission
+        tr = open_loop_trace(tenants(rate=50000.0), jobs_per_tenant=10,
+                             seed=2)
+        by = {}
+        for policy in ("fifo", "priority"):
+            res = ServingRuntime(Interconnect.SHARED_PIM, GEOM,
+                                 admission=policy).run(tr)
+            by[policy] = summarize(res)["per_tenant"]["bfs"]["p99_ns"]
+        assert by["priority"] < by["fifo"]
+
+    def test_closed_loop_self_limits(self):
+        ts = [TenantSpec.make("mm", "mm", n=16, banks=1, concurrency=2)]
+        src = ClosedLoopSource(ts, jobs_per_tenant=6, seed=0)
+        rt = ServingRuntime(Interconnect.SHARED_PIM, GEOM)
+        res = rt.run((), closed=src)
+        assert len(res) == 6
+        # never more than `concurrency` jobs overlap in service
+        events = [(r.admit_ns, 1) for r in res] + \
+                 [(r.finish_ns, -1) for r in res]
+        live = peak = 0
+        for _, d in sorted(events):
+            live += d
+            peak = max(peak, live)
+        assert peak <= 2
+
+    def test_oversized_tenant_rejected(self):
+        bad = [TenantSpec.make("big", "mm", n=16, banks=GEOM.n_banks + 1)]
+        tr = open_loop_trace(bad, jobs_per_tenant=1, seed=0)
+        with pytest.raises(ValueError, match="banks"):
+            ServingRuntime(Interconnect.LISA, GEOM).run(tr)
+
+    def test_summary_shape(self):
+        s = summarize([])
+        assert s["n_jobs"] == 0 and s["throughput_jps"] == 0.0
+        res = ServingRuntime(Interconnect.LISA, GEOM).run(self.trace(n=3))
+        s = summarize(res)
+        assert s["n_jobs"] == len(res)
+        assert set(s["latency_ns"]) == {"p50", "p95", "p99"}
+        assert s["latency_ns"]["p50"] <= s["latency_ns"]["p99"]
