@@ -1,0 +1,194 @@
+"""Model-inference serving benchmark: offered load x interconnect on a
+mixed model-tenant fleet.
+
+Where :mod:`benchmarks.serving` streams the five Fig-8 micro-apps, this
+benchmark serves *model inference* tenants lowered from the repo's config
+registry by the workload frontend (:mod:`repro.frontend`): decode tenants
+(narrow, latency-bound — a chat fleet) mixed with prefill tenants (wide,
+throughput-bound — bulk ingestion), across dense, MoE, SSM, and hybrid
+families.  Rates are calibrated exactly like the serving benchmark: each
+tenant's single-job service time is measured offline under LISA, and
+offered load ``L`` is the fraction of the device's LISA bank-time capacity
+the trace demands.  Both interconnects replay the identical arrival trace.
+
+Written to ``BENCH_inference.json``:
+
+* per-(interconnect, policy, load) curves: throughput, p50/p95/p99, queue
+  delay, refresh occupancy;
+* sustained load per interconnect at the p99 SLO, asserted **strictly
+  higher for Shared-PIM than for LISA** under FIFO admission — the paper's
+  concurrent-data-flow thesis measured on production-shaped workloads;
+* an online-vs-offline guard: a zero-refresh single-job inference session
+  must reproduce the offline scheduler **bit-for-bit** per model family.
+
+The process exits non-zero if any guard fails or ``--budget-s`` is blown.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/inference.py            # full sweep
+    PYTHONPATH=src python benchmarks/inference.py --smoke    # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core.engine import RefreshSpec
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry, DeviceModel
+from repro.runtime import ADMISSION_POLICIES, open_loop_trace
+
+try:                     # package execution: python -m benchmarks.inference
+    from benchmarks import serving
+except ImportError:      # script execution: benchmarks/ is sys.path[0]
+    import serving
+
+#: the mixed fleet: decode (narrow/latency) and prefill (wide/throughput)
+#: tenants across dense / MoE / SSM / hybrid families.  ``n_layers``
+#: depth-scales each job to serving size; family structure is untouched.
+TENANTS = [
+    dict(name="chat-gemma", app="gemma3-1b", banks=1, priority=2,
+         kw=dict(phase="decode", n_layers=6)),
+    dict(name="bulk-qwen-moe", app="qwen2-moe-a2.7b", banks=2, priority=0,
+         kw=dict(phase="prefill", n_layers=3, seq_tiles=4)),
+    dict(name="chat-mamba", app="falcon-mamba-7b", banks=1, priority=1,
+         kw=dict(phase="decode", n_layers=6)),
+    dict(name="bulk-zamba", app="zamba2-2.7b", banks=2, priority=0,
+         kw=dict(phase="prefill", n_layers=3, seq_tiles=4)),
+    dict(name="chat-granite", app="granite-3-2b", banks=1, priority=1,
+         kw=dict(phase="decode", n_layers=6)),
+]
+TENANTS_SMOKE = [
+    dict(name="chat-gemma", app="gemma3-1b", banks=1, priority=2,
+         kw=dict(phase="decode", n_layers=3)),
+    dict(name="bulk-qwen-moe", app="qwen2-moe-a2.7b", banks=2, priority=0,
+         kw=dict(phase="prefill", n_layers=2, seq_tiles=2)),
+    dict(name="chat-mamba", app="falcon-mamba-7b", banks=1, priority=1,
+         kw=dict(phase="decode", n_layers=3)),
+]
+
+#: offered load as a fraction of LISA service capacity; > 1 is past LISA
+#: saturation by construction
+LOADS = (0.15, 0.3, 0.6, 0.9, 1.2, 1.5)
+
+#: (arch, phase) cells for the online-vs-offline bit-for-bit guard
+CONSISTENCY_CELLS = {
+    "gemma3-1b": dict(phase="decode", n_layers=2),
+    "qwen2-moe-a2.7b": dict(phase="prefill", n_layers=2, seq_tiles=2),
+    "falcon-mamba-7b": dict(phase="decode", n_layers=2),
+}
+
+# the load-sweep machinery is the serving benchmark's, verbatim: same
+# LISA-capacity calibration, same per-cell driver, same SLO accounting —
+# a fix to either benchmark's methodology reaches both
+calibrated_tenants = serving.calibrated_tenants
+sweep_cell = serving.sweep_cell
+sustained_load = serving.sustained_load
+consistency_failures = serving.consistency_failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fleet and job counts")
+    ap.add_argument("--banks", type=int, default=None,
+                    help="banks on the device (default: 8 full, 4 smoke)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="jobs per tenant per load level "
+                         "(default: 30 full, 10 smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-mult", type=float, default=4.0,
+                    help="p99 SLO as a multiple of the slowest tenant's "
+                         "LISA service time")
+    ap.add_argument("--policies", default="fifo",
+                    help="comma-separated admission policies "
+                         f"(any of {','.join(ADMISSION_POLICIES)})")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if the whole sweep exceeds this wall time")
+    ap.add_argument("--out", default="BENCH_inference.json")
+    args = ap.parse_args(argv)
+
+    specs = TENANTS_SMOKE if args.smoke else TENANTS
+    n_banks = args.banks or (4 if args.smoke else 8)
+    jobs = args.jobs or (10 if args.smoke else 30)
+    policies = tuple(args.policies.split(","))
+    geom = DeviceGeometry(channels=1, banks_per_channel=n_banks,
+                          bank_groups_per_channel=max(1, n_banks // 2))
+    refresh = RefreshSpec()
+
+    t0 = time.perf_counter()
+    tenants, s_max = calibrated_tenants(specs, geom)
+    slo_ns = args.slo_mult * s_max
+    print(f"device: {geom.describe()}")
+    print(f"slowest LISA service: {s_max / 1e3:.1f} us; "
+          f"p99 SLO: {slo_ns / 1e3:.1f} us")
+
+    rows = []
+    models = {mode: DeviceModel(mode, geom) for mode in Interconnect}
+    for load in LOADS:
+        trace = open_loop_trace(tenants, jobs_per_tenant=jobs,
+                                seed=args.seed, load=load)
+        for policy in policies:
+            for mode in Interconnect:
+                r = sweep_cell(mode, policy, load, trace, geom, refresh,
+                               models[mode])
+                rows.append(r)
+                print(f"load={load:4.2f} {policy:8s} {mode.value:10s} "
+                      f"p99={r['p99_ns'] / 1e3:10.1f} us "
+                      f"thru={r['throughput_jps']:8.0f} j/s "
+                      f"{'OK' if r['p99_ns'] <= slo_ns else 'SLO-MISS'}")
+
+    sustained = {
+        mode.value: {p: sustained_load(rows, mode, p, slo_ns)
+                     for p in policies}
+        for mode in Interconnect}
+
+    failures = []
+    lisa_fifo = sustained["lisa"].get("fifo", 0.0)
+    sp_fifo = sustained["shared_pim"].get("fifo", 0.0)
+    if "fifo" in policies and not sp_fifo > lisa_fifo:
+        failures.append(
+            f"shared-pim sustained load {sp_fifo} not strictly above "
+            f"lisa {lisa_fifo} at p99 SLO {slo_ns:.0f} ns (fifo)")
+
+    mismatches = consistency_failures(geom, CONSISTENCY_CELLS)
+    failures += mismatches
+
+    wall = time.perf_counter() - t0
+    if args.budget_s is not None and wall > args.budget_s:
+        failures.append(f"sweep {wall:.1f}s over budget {args.budget_s}s")
+
+    out = {
+        "config": {
+            "smoke": args.smoke, "banks": n_banks, "jobs_per_tenant": jobs,
+            "seed": args.seed, "loads": list(LOADS),
+            "policies": list(policies),
+            "tenants": [{**{k: v for k, v in s.items() if k != "kw"},
+                         **s["kw"]} for s in specs],
+            "refresh": serving.dataclassdict(refresh),
+            "slo_ns": slo_ns, "slo_mult": args.slo_mult,
+            "wall_s": wall,
+        },
+        "curves": rows,
+        "sustained_load": sustained,
+        "session_matches_offline": not mismatches,
+        "guard_ok": not failures,
+        "failures": failures,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} cells, {wall:.1f}s)")
+    print(f"sustained load at p99 SLO: {sustained}")
+    if failures:
+        print("FAILURES:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("shared-pim sustains strictly higher inference load than lisa at "
+          "the SLO; session == offline bit-for-bit")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

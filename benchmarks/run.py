@@ -25,6 +25,10 @@ _HEADLINES = {
                       lambda d: max(d.get("sustained_load", {})
                                     .get("shared_pim", {}).values(),
                                     default=None)),
+    "BENCH_inference": ("sustained_load_shared_pim",
+                        lambda d: max(d.get("sustained_load", {})
+                                      .get("shared_pim", {}).values(),
+                                      default=None)),
 }
 
 #: keys whose recorded value constitutes a pass/fail guard, in the order

@@ -120,7 +120,10 @@ def sweep_cell(mode: Interconnect, policy: str, load: float, trace,
         "p95_ns": s["latency_ns"]["p95"],
         "p99_ns": s["latency_ns"]["p99"],
         "mean_queue_ns": s["mean_queue_ns"],
+        # first-arrival -> last-finish span (the throughput denominator);
+        # t_end_ns is the absolute end of the batch
         "makespan_ns": s["makespan_ns"],
+        "t_end_ns": s["t_end_ns"],
         "refresh_ns": rt.session.stats().refresh_ns,
     }
 

@@ -269,8 +269,45 @@ _STRUCTS = {
 }
 
 
+def register_app(app: str, struct_fn, params: tuple) -> None:
+    """Register an externally defined structural app builder.
+
+    ``struct_fn(**kw)`` must return a structural :class:`TaskGraph` and
+    expose ``cache_clear`` (the sweep runner's cold-start hook clears every
+    registered builder); ``params`` is its ``((keyword, default), …)``
+    signature, recorded exactly like the builtin apps'.  The model frontend
+    (:mod:`repro.frontend`) registers every config-registry arch this way.
+    """
+    if app in APPS:
+        raise ValueError(f"cannot re-register builtin app {app!r}")
+    if app in _STRUCTS:
+        # a silent overwrite would let graphs memoized under the old
+        # builder coexist with the new one's in the placement caches
+        raise ValueError(f"app {app!r} is already registered")
+    if not callable(getattr(struct_fn, "cache_clear", None)):
+        raise ValueError(f"app {app!r} builder must expose cache_clear")
+    _STRUCTS[app] = (struct_fn, tuple(params))
+
+
+def _load_registered_apps() -> None:
+    """Import the entry-point modules that register extra apps."""
+    import repro.frontend  # noqa: F401  (registers the model archs)
+
+
+def known_apps(load_registered: bool = True) -> tuple[str, ...]:
+    """Every dispatchable app name (builtins + registered model archs)."""
+    if load_registered:
+        _load_registered_apps()
+    return tuple(_STRUCTS)
+
+
 def structural(app: str, **kw) -> TaskGraph:
     """The memoized mode-independent graph for one problem shape."""
+    if app not in _STRUCTS:
+        _load_registered_apps()
+        if app not in _STRUCTS:
+            raise ValueError(
+                f"unknown app {app!r}; known: {sorted(_STRUCTS)}")
     fn, sig = _STRUCTS[app]
     kw = dict(kw)
     # pass by keyword: a parameter-order mismatch between a wrapper and its

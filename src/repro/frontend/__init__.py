@@ -1,0 +1,42 @@
+"""Model-inference workload frontend.
+
+Lowers the model zoo (:mod:`repro.configs`) into the simulator's structural
+:class:`~repro.core.ir.TaskGraph` IR and registers every registry arch as a
+servable app, so a :class:`~repro.runtime.trace.TenantSpec` can name a
+model the same way it names a Fig-8 micro-app::
+
+    from repro import runtime
+
+    tenants = [
+        runtime.TenantSpec.make("chat", "gemma3-1b", phase="decode",
+                                n_layers=4, banks=1, rate_jps=400.0),
+        runtime.TenantSpec.make("bulk", "qwen2-moe-a2.7b", phase="prefill",
+                                n_layers=4, banks=2, rate_jps=120.0),
+    ]
+
+Importing this package is what performs the registration;
+:func:`repro.core.taskgraph.structural` (and therefore the serving runtime
+and batch sweeps) import it lazily on the first unknown app name, so the
+model half of the repo stays off the hot import path of pure-Fig-8 runs.
+"""
+
+from repro.frontend.lower import (MODEL_APPS, MODEL_PARAMS,  # noqa: F401
+                                  MODEL_PHASES, _model_struct, lower,
+                                  model_struct)
+from repro.core import taskgraph
+
+
+def register() -> None:
+    """Register every registry arch as a structural app (idempotent)."""
+    for arch in MODEL_APPS:
+        if arch in taskgraph.known_apps(load_registered=False):
+            continue
+
+        def fn(_arch=arch, **kw):
+            return model_struct(_arch, **kw)
+
+        fn.cache_clear = _model_struct.cache_clear
+        taskgraph.register_app(arch, fn, MODEL_PARAMS)
+
+
+register()

@@ -30,4 +30,5 @@ from repro.runtime.allocator import (ADMISSION_POLICIES,  # noqa: F401
 from repro.runtime.serve import (JobResult, ServingRuntime,  # noqa: F401
                                  summarize)
 from repro.runtime.trace import (TRACE_APPS, ClosedLoopSource,  # noqa: F401
-                                 JobRequest, TenantSpec, open_loop_trace)
+                                 JobRequest, TenantSpec, known_apps,
+                                 open_loop_trace)

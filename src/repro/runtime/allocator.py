@@ -55,6 +55,7 @@ class BankAllocator:
         self.policy = policy
         self._free: set[int] = set(range(geom.n_banks))
         self._queue: list = []               # heap of (key, banks, payload)
+        self._active: dict[int, Lease] = {}  # ticket -> outstanding lease
         self._seq = 0
 
     # --- introspection ----------------------------------------------------------
@@ -62,6 +63,10 @@ class BankAllocator:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_leased(self) -> int:
+        return len(self._active)
 
     @property
     def n_queued(self) -> int:
@@ -95,10 +100,25 @@ class BankAllocator:
         return self._drain()
 
     def release(self, lease: Lease) -> list[Lease]:
-        """Return a lease's banks and admit whatever now fits."""
-        if self._free & set(lease.banks):
-            raise ValueError(f"double release of banks "
-                             f"{sorted(self._free & set(lease.banks))}")
+        """Return a lease's banks and admit whatever now fits.
+
+        Only leases this allocator granted and has not yet released are
+        accepted; a stale or foreign lease raises ``ValueError``.  (The
+        pre-fix code only cross-checked the freed banks against the *free*
+        set, so releasing a stale lease whose banks had already been
+        re-leased silently freed another tenant's banks mid-job.)
+        """
+        active = self._active.get(lease.ticket)
+        if active is None:
+            raise ValueError(
+                f"unknown or already-released lease ticket {lease.ticket} "
+                f"(banks {list(lease.banks)}); outstanding tickets: "
+                f"{sorted(self._active)}")
+        if active.banks != lease.banks:
+            raise ValueError(
+                f"lease ticket {lease.ticket} was granted banks "
+                f"{list(active.banks)}, not {list(lease.banks)}")
+        del self._active[lease.ticket]
         self._free.update(lease.banks)
         return self._drain()
 
@@ -109,7 +129,9 @@ class BankAllocator:
             _key, banks, payload = heapq.heappop(self._queue)
             picked = self._pick_banks(banks)
             self._free.difference_update(picked)
-            granted.append(Lease(self._seq, picked, payload))
+            lease = Lease(self._seq, picked, payload)
+            self._active[lease.ticket] = lease
+            granted.append(lease)
             self._seq += 1
         return granted
 

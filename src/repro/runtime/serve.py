@@ -186,10 +186,18 @@ class ServingRuntime:
 
 
 def summarize(results, *, percentiles=(50.0, 95.0, 99.0)) -> dict:
-    """Throughput and latency percentiles over a batch of job results."""
+    """Throughput and latency percentiles over a batch of job results.
+
+    ``makespan_ns`` is the first-arrival → last-finish *span* — the same
+    denominator ``throughput_jps`` divides by.  (It used to report the
+    absolute last finish time, which only coincides with the span when the
+    batch arrives at t=0.)  The absolute window endpoints are exposed
+    separately as ``t_start_ns`` / ``t_end_ns``.
+    """
     if not results:
         return {"n_jobs": 0, "throughput_jps": 0.0, "latency_ns": {},
-                "mean_queue_ns": 0.0, "makespan_ns": 0.0, "per_tenant": {}}
+                "mean_queue_ns": 0.0, "makespan_ns": 0.0,
+                "t_start_ns": 0.0, "t_end_ns": 0.0, "per_tenant": {}}
     lat = np.asarray([r.latency_ns for r in results], dtype=np.float64)
     queue = np.asarray([r.queue_ns for r in results], dtype=np.float64)
     t0 = min(r.arrival_ns for r in results)
@@ -205,7 +213,9 @@ def summarize(results, *, percentiles=(50.0, 95.0, 99.0)) -> dict:
                        for p in percentiles},
         "mean_latency_ns": float(lat.mean()),
         "mean_queue_ns": float(queue.mean()),
-        "makespan_ns": t1,
+        "makespan_ns": span,
+        "t_start_ns": t0,
+        "t_end_ns": t1,
         "per_tenant": {
             name: {"n_jobs": len(ls),
                    "p99_ns": float(np.percentile(np.asarray(ls), 99.0))}

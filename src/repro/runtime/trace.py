@@ -27,8 +27,16 @@ import dataclasses
 
 import numpy as np
 
-#: the five Fig-8 applications a tenant may run
+#: the five builtin Fig-8 applications; model archs registered by the
+#: inference frontend (:mod:`repro.frontend`) are equally valid tenant
+#: apps — :func:`known_apps` lists both
 TRACE_APPS = ("mm", "pmm", "ntt", "bfs", "dfs")
+
+
+def known_apps() -> tuple[str, ...]:
+    """Every app a tenant may name: Fig-8 builtins + registered models."""
+    from repro.core import taskgraph
+    return taskgraph.known_apps()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,8 +60,9 @@ class TenantSpec:
     def make(cls, name: str, app: str, *, rate_jps: float = 50.0,
              priority: int = 0, banks: int = 1, concurrency: int = 1,
              think_ns: float = 0.0, **kw) -> "TenantSpec":
-        if app not in TRACE_APPS:
-            raise ValueError(f"unknown app {app!r}; pick one of {TRACE_APPS}")
+        if app not in TRACE_APPS and app not in known_apps():
+            raise ValueError(
+                f"unknown app {app!r}; pick one of {known_apps()}")
         if rate_jps < 0 or banks < 1 or concurrency < 1 or think_ns < 0:
             raise ValueError(
                 f"invalid tenant shape for {name!r}: rate_jps={rate_jps}, "
@@ -107,6 +116,17 @@ def open_loop_trace(tenants, *, jobs_per_tenant: int | None = None,
     for ti, t in enumerate(tenants):
         rate = t.rate_jps * load
         if rate <= 0.0:
+            if jobs_per_tenant is not None:
+                # a zero-rate tenant can never produce its fixed job count;
+                # silently emitting an empty stream would break the "every
+                # load level completes the same job population" invariant
+                # the cross-load comparisons rely on
+                raise ValueError(
+                    f"tenant {t.name!r} has arrival rate {rate} jobs/s "
+                    f"(rate_jps={t.rate_jps}, load={load}) but "
+                    f"jobs_per_tenant={jobs_per_tenant} bounding requires "
+                    "every tenant to complete its stream; give it a "
+                    "positive rate or bound by horizon_ns")
             continue
         rng = _tenant_rng(seed, ti)
         mean_ns = 1e9 / rate

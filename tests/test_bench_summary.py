@@ -18,10 +18,14 @@ def test_collects_headlines_and_guard_verdicts(tmp_path):
     write(tmp_path, "BENCH_serving.json",
           {"guard_ok": True, "failures": [], "session_matches_offline": True,
            "sustained_load": {"shared_pim": {"fifo": 1.5, "sjf": 1.2}}})
+    write(tmp_path, "BENCH_inference.json",
+          {"guard_ok": True, "failures": [], "session_matches_offline": True,
+           "sustained_load": {"shared_pim": {"fifo": 0.9}}})
     rows = {r["name"]: r for r in summarize_bench_artifacts(tmp_path)}
     assert rows["BENCH_sweep"]["value"] == 5.5
     assert rows["BENCH_device"]["value"] == 0.7
     assert rows["BENCH_serving"]["value"] == 1.5
+    assert rows["BENCH_inference"]["value"] == 0.9
     assert all(r["guard"] == "PASS" for r in rows.values())
 
 

@@ -1,0 +1,200 @@
+"""Model-inference frontend: lowering, registration, and serving."""
+
+import pytest
+
+from repro.configs import registry
+from repro.core import ir, taskgraph
+from repro.core.engine import EngineSession
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry, DeviceModel, partition
+from repro.device import scheduler as dev_sched
+from repro import frontend
+from repro.frontend import MODEL_APPS, MODEL_PHASES, lower, model_struct
+from repro.runtime import ServingRuntime, TenantSpec, open_loop_trace, \
+    summarize
+
+GEOM = DeviceGeometry(channels=1, banks_per_channel=4)
+
+
+class TestLowering:
+    @pytest.mark.parametrize("arch", sorted(MODEL_APPS))
+    @pytest.mark.parametrize("phase", MODEL_PHASES)
+    def test_every_arch_lowers_and_validates(self, arch, phase):
+        g = model_struct(arch, phase=phase, n_pes=32, n_layers=2)
+        g.validate()
+        assert g.n > 0
+        # structural: ops are symbolic, durations unmaterialized
+        assert (g.op_class[g.kinds == ir.OP] >= 0).all()
+        assert (g.duration == 0.0).all()
+
+    def test_decode_is_narrower_than_prefill(self):
+        for arch in ("gemma3-1b", "qwen2-moe-a2.7b", "falcon-mamba-7b"):
+            dec = model_struct(arch, phase="decode", n_pes=32, n_layers=2)
+            pre = model_struct(arch, phase="prefill", n_pes=32, n_layers=2)
+            assert dec.n < pre.n
+
+    def test_depth_scales_with_n_layers(self):
+        a = model_struct("gemma3-1b", phase="decode", n_pes=32, n_layers=2)
+        b = model_struct("gemma3-1b", phase="decode", n_pes=32, n_layers=4)
+        assert a.n < b.n
+
+    def test_memoized_per_shape(self):
+        a = model_struct("gemma3-1b", phase="decode", n_pes=32, n_layers=2)
+        b = model_struct("gemma3-1b", phase="decode", n_pes=32, n_layers=2)
+        assert a is b
+
+    def test_default_layer_count_is_the_configs(self):
+        cfg = registry.get("gemma3-1b")
+        g = lower(cfg, "decode", n_pes=32)
+        g2 = lower(cfg, "decode", n_pes=32, n_layers=cfg.n_layers)
+        assert g.n == g2.n
+
+    def test_moe_layers_fan_out_to_experts(self):
+        cfg = registry.get("qwen2-moe-a2.7b")
+        g = lower(cfg, "prefill", n_pes=32, n_layers=1, seq_tiles=1)
+        tags = set(g.tags)
+        for e in range(cfg.n_experts_active):
+            assert any(f".exp{e}." in t for t in tags)
+        assert any(".shexp." in t for t in tags)
+        assert any(".combine." in t for t in tags)
+
+    def test_ssm_layers_emit_scan_chains(self):
+        g = lower(registry.get("falcon-mamba-7b"), "prefill", n_pes=32,
+                  n_layers=1, seq_tiles=3)
+        tags = g.tags
+        assert any(".ssm.scan" in t for t in tags)
+        # the recurrence carries state tile to tile in prefill
+        assert any(".ssm.carry" in t for t in tags)
+
+    def test_hybrid_mixes_attention_and_ssm(self):
+        cfg = registry.get("zamba2-2.7b")
+        g = lower(cfg, "decode", n_pes=32, n_layers=cfg.attn_every)
+        tags = g.tags
+        assert any(".ssm." in t for t in tags)
+        assert any(".qkv." in t for t in tags)
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError, match="phase"):
+            model_struct("gemma3-1b", phase="train")
+        with pytest.raises(ValueError, match="arch"):
+            model_struct("not-a-model")
+        with pytest.raises(ValueError, match="n_layers"):
+            model_struct("gemma3-1b", n_layers=0)
+        with pytest.raises(ValueError, match="seq_tiles"):
+            model_struct("gemma3-1b", seq_tiles=0)
+        with pytest.raises(ValueError, match="n_pes"):
+            lower(registry.get("gemma3-1b"), "decode", n_pes=0)
+
+
+class TestRegistration:
+    def test_registered_alongside_builtin_apps(self):
+        known = taskgraph.known_apps()
+        assert set(taskgraph.APPS) <= set(known)
+        assert set(MODEL_APPS) <= set(known)
+
+    def test_structural_dispatches_model_apps(self):
+        g = taskgraph.structural("gemma3-1b", phase="decode", n_pes=32,
+                                 n_layers=2)
+        assert g is model_struct("gemma3-1b", phase="decode", n_pes=32,
+                                 n_layers=2)
+
+    def test_structural_unknown_app_raises(self):
+        with pytest.raises(ValueError, match="unknown app"):
+            taskgraph.structural("not-an-app")
+
+    def test_builtins_cannot_be_clobbered(self):
+        with pytest.raises(ValueError, match="builtin"):
+            taskgraph.register_app("mm", lambda: None, ())
+
+    def test_register_requires_cache_clear(self):
+        with pytest.raises(ValueError, match="cache_clear"):
+            taskgraph.register_app("some-model", lambda: None, ())
+
+    def test_cannot_overwrite_registered_app(self):
+        def fn(**kw):
+            return None
+        fn.cache_clear = lambda: None
+        with pytest.raises(ValueError, match="already registered"):
+            taskgraph.register_app("gemma3-1b", fn, ())
+
+    def test_register_is_idempotent(self):
+        before = taskgraph.known_apps()
+        frontend.register()
+        assert taskgraph.known_apps() == before
+
+    def test_clear_caches_covers_model_builders(self):
+        from repro.device import batch
+
+        g = model_struct("gemma3-1b", phase="decode", n_pes=32, n_layers=2)
+        batch.clear_caches()
+        assert model_struct("gemma3-1b", phase="decode", n_pes=32,
+                            n_layers=2) is not g
+
+    def test_tenant_spec_accepts_model_apps(self):
+        t = TenantSpec.make("chat", "gemma3-1b", phase="decode", n_layers=2)
+        assert t.kwargs == {"phase": "decode", "n_layers": 2}
+        with pytest.raises(ValueError, match="unknown app"):
+            TenantSpec.make("bad", "gemma99-zz")
+
+    def test_materialize_prices_both_modes(self):
+        g = model_struct("granite-3-2b", phase="decode", n_pes=32,
+                         n_layers=2)
+        lisa = ir.materialize(g, Interconnect.LISA)
+        sp = ir.materialize(g, Interconnect.SHARED_PIM)
+        ops = g.kinds == ir.OP
+        assert (lisa.duration[ops] > 0).all()
+        assert (sp.duration[ops] > 0).all()
+
+
+class TestModelServing:
+    def tenants(self):
+        return [
+            TenantSpec.make("chat", "gemma3-1b", phase="decode", n_layers=2,
+                            banks=1, rate_jps=2000.0, priority=2),
+            TenantSpec.make("bulk", "qwen2-moe-a2.7b", phase="prefill",
+                            n_layers=2, seq_tiles=2, banks=2,
+                            rate_jps=500.0),
+            TenantSpec.make("mamba", "falcon-mamba-7b", phase="decode",
+                            n_layers=2, banks=1, rate_jps=1500.0),
+        ]
+
+    def test_lease_confines_model_graph(self):
+        g = taskgraph.structural("gemma3-1b", phase="decode",
+                                 n_pes=2 * GEOM.pes_per_bank, n_layers=2)
+        placed = partition.place_on_banks(g, GEOM, (1, 3))
+        ppb = GEOM.pes_per_bank
+        pes = set(placed.pe[placed.pe >= 0].tolist()) \
+            | set(placed.src[placed.src >= 0].tolist()) \
+            | set(placed.dst_flat.tolist())
+        assert {p // ppb for p in pes} <= {1, 3}
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_serves_model_fleet_to_completion(self, mode):
+        tr = open_loop_trace(self.tenants(), jobs_per_tenant=4, seed=0)
+        res = ServingRuntime(mode, GEOM).run(tr)
+        assert len(res) == len(tr)
+        for r in res:
+            assert r.finish_ns >= r.admit_ns >= r.arrival_ns
+
+    def test_shared_pim_beats_lisa_on_model_fleet(self):
+        tr = open_loop_trace(self.tenants(), jobs_per_tenant=5, seed=1)
+        p99 = {}
+        for mode in Interconnect:
+            s = summarize(ServingRuntime(mode, GEOM).run(tr))
+            p99[mode] = s["latency_ns"]["p99"]
+        assert p99[Interconnect.SHARED_PIM] < p99[Interconnect.LISA]
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_single_job_session_matches_offline(self, mode):
+        # the inference benchmark's bit-for-bit guard, in-suite
+        g = ir.materialize(
+            partition.partitioned_struct("gemma3-1b", GEOM, phase="decode",
+                                         n_layers=2), mode)
+        offline = dev_sched.schedule(g, mode, GEOM)
+        session = EngineSession(DeviceModel(mode, GEOM))
+        session.admit(g)
+        session.advance()
+        stats = session.stats()
+        for f in ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns",
+                  "n_ops", "n_moves", "n_rows_moved", "finish_times"):
+            assert getattr(stats, f) == getattr(offline, f), f

@@ -56,6 +56,18 @@ class TestTrace:
         with pytest.raises(ValueError):
             open_loop_trace(tenants(), jobs_per_tenant=2, horizon_ns=1.0)
 
+    def test_zero_rate_under_job_bounding_raises(self):
+        # regression: a rate<=0 tenant used to silently emit an empty
+        # stream, breaking the "every load level completes the same job
+        # population" invariant of cross-load comparisons
+        zero = [TenantSpec.make("idle", "mm", n=16, rate_jps=0.0)]
+        with pytest.raises(ValueError, match="idle"):
+            open_loop_trace(zero, jobs_per_tenant=3, seed=0)
+        with pytest.raises(ValueError, match="load"):
+            open_loop_trace(tenants(), jobs_per_tenant=3, seed=0, load=0.0)
+        # a horizon-bounded window legitimately contains no arrivals
+        assert open_loop_trace(zero, horizon_ns=1e6, seed=0) == []
+
     def test_closed_loop_budget_and_determinism(self):
         ts = [TenantSpec.make("mm", "mm", n=16, concurrency=2,
                               think_ns=50.0)]
@@ -158,6 +170,34 @@ class TestAllocator:
         with pytest.raises(ValueError):
             BankAllocator(GEOM, "lifo")
 
+    def test_stale_lease_cannot_free_released_banks(self):
+        # regression: release() used to only cross-check the freed banks
+        # against the *free* set, so releasing a stale lease whose banks
+        # had been re-leased silently freed another tenant's banks mid-job
+        al = BankAllocator(GEOM, "fifo")
+        stale = al.request(2, payload="a")[0]
+        al.release(stale)
+        fresh = al.request(2, payload="b")[0]
+        assert fresh.banks == stale.banks      # same banks, new tenant
+        with pytest.raises(ValueError, match="already-released"):
+            al.release(stale)
+        assert al.n_free == GEOM.n_banks - 2   # b's banks stayed leased
+        assert al.n_leased == 1
+        al.release(fresh)
+        assert al.n_free == GEOM.n_banks and al.n_leased == 0
+
+    def test_foreign_and_tampered_leases_rejected(self):
+        from repro.runtime.allocator import Lease
+
+        al = BankAllocator(GEOM, "fifo")
+        lease = al.request(2)[0]
+        with pytest.raises(ValueError, match="unknown"):
+            al.release(Lease(ticket=999, banks=(0, 1)))
+        with pytest.raises(ValueError, match="granted banks"):
+            al.release(Lease(ticket=lease.ticket, banks=(2, 3)))
+        assert al.n_leased == 1                # still intact
+        al.release(lease)
+
 
 class TestServingRuntime:
     def trace(self, n=6, seed=0):
@@ -240,8 +280,22 @@ class TestServingRuntime:
     def test_summary_shape(self):
         s = summarize([])
         assert s["n_jobs"] == 0 and s["throughput_jps"] == 0.0
+        assert s["makespan_ns"] == s["t_start_ns"] == s["t_end_ns"] == 0.0
         res = ServingRuntime(Interconnect.LISA, GEOM).run(self.trace(n=3))
         s = summarize(res)
         assert s["n_jobs"] == len(res)
         assert set(s["latency_ns"]) == {"p50", "p95", "p99"}
         assert s["latency_ns"]["p50"] <= s["latency_ns"]["p99"]
+
+    def test_summary_makespan_is_the_span(self):
+        # regression: makespan_ns used to report the absolute last finish,
+        # not the first-arrival -> last-finish span the throughput divides
+        # by; on a batch starting at t>0 the two differ
+        from repro.runtime.serve import JobResult
+
+        res = [JobResult("t", "mm", 0, 1000.0, 1100.0, 2000.0, (0,), 5),
+               JobResult("t", "mm", 1, 1500.0, 1600.0, 3500.0, (0,), 5)]
+        s = summarize(res)
+        assert s["makespan_ns"] == 2500.0      # 3500 - 1000, not 3500
+        assert s["t_start_ns"] == 1000.0 and s["t_end_ns"] == 3500.0
+        assert s["throughput_jps"] == pytest.approx(2 / 2500.0 * 1e9)
