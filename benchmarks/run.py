@@ -29,6 +29,10 @@ _HEADLINES = {
                         lambda d: max(d.get("sustained_load", {})
                                       .get("shared_pim", {}).values(),
                                       default=None)),
+    "BENCH_passes": ("max_sp_gain_from_passes",
+                     lambda d: max((c["shared_pim_gain"]
+                                    for c in d.get("cells", [])
+                                    if c.get("guarded")), default=None)),
 }
 
 #: keys whose recorded value constitutes a pass/fail guard, in the order

@@ -37,6 +37,14 @@ with the mode — so each builder constructs a structural
 :func:`build_ir` materializes durations for a concrete mode in one
 vectorized lookup.  The legacy ``list[Task]`` entry points are preserved as
 converting wrappers.
+
+The builders emit **logical** IR: virtual PEs, symbolic op classes, every
+hand-off spelled out.  Physical decisions belong to the :mod:`repro.passes`
+pipeline — placement policies are its place stage
+(:mod:`repro.device.partition`), and redundant-move cleanup is its optimize
+stage; ``build_ir(app, mode, opt=...)`` runs that stage for single-bank
+studies.  By default no optimization runs and the graphs are bit-for-bit
+the pre-pipeline ones (the golden schedules pin this).
 """
 
 from __future__ import annotations
@@ -319,9 +327,20 @@ def structural(app: str, **kw) -> TaskGraph:
     return fn(**full)
 
 
-def build_ir(app: str, mode: Interconnect, **kw) -> TaskGraph:
-    """Materialized IR graph for (app, mode): the schedulers' fast path."""
-    return ir.materialize(structural(app, **kw), mode)
+def build_ir(app: str, mode: Interconnect, *, opt: tuple = (),
+             **kw) -> TaskGraph:
+    """Materialized IR graph for (app, mode): the schedulers' fast path.
+
+    ``opt`` names :mod:`repro.passes` optimization passes to run on the
+    structural graph before materializing (the single-bank pipeline: no
+    place stage, the whole PE space is one bank).  The default — no
+    passes — is the pipeline-off path the goldens pin.
+    """
+    g = structural(app, **kw)
+    if opt:
+        from repro import passes as passlib  # local: passes is a peer layer
+        g, _ = passlib.optimization_pipeline(opt).run(g)
+    return ir.materialize(g, mode)
 
 
 def build(app: str, mode: Interconnect, **kw) -> list:

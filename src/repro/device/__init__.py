@@ -31,7 +31,8 @@ from repro.device.interconnect import (CrossBankPlan, plan,  # noqa: F401
                                        transit_ns_per_row)
 from repro.device.partition import (POLICIES, build_partitioned,  # noqa: F401
                                     build_partitioned_ir,
-                                    cross_traffic_rows, pe_map, place)
+                                    cross_traffic_rows, optimization_log,
+                                    optimized_struct, pe_map, place)
 from repro.device.resources import DeviceModel  # noqa: F401
 from repro.device.scheduler import (DeviceScheduleResult,  # noqa: F401
                                     compare, improvement, schedule)

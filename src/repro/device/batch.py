@@ -11,6 +11,12 @@ whole grid in one call and deduplicates everything that is shared:
   scaling) cell via :func:`repro.device.partition.partitioned_struct`;
   both interconnects of a cell share the same placed structure, its
   successor CSR and its level assignment (memoized on the graph);
+* **optimized graphs** — when a config names optimization passes
+  (``SweepConfig.opt``), the pass-pipeline output is memoized per (cell,
+  pipeline) via :func:`repro.device.partition.optimized_struct`, whose
+  cache key carries the pipeline's pass identity (its fingerprint is
+  recorded alongside), so every mode of a cell — and every other config
+  sharing the pipeline — reuses one optimized artifact;
 * **durations** — materialized per mode as one vectorized lookup;
 * **resource models** — one :class:`~repro.device.resources.DeviceModel`
   (and its memoized cross-bank plan prices) per (mode, geometry).
@@ -35,7 +41,13 @@ from repro.device.scheduler import DeviceScheduleResult
 
 @dataclasses.dataclass(frozen=True)
 class SweepConfig:
-    """One cell of a sweep grid (hashable; ``kw`` holds app kwargs)."""
+    """One cell of a sweep grid (hashable; ``kw`` holds app kwargs).
+
+    ``opt`` names the pass-pipeline optimization stage for this cell
+    (:data:`repro.passes.OPT_PASSES` keys, order significant); the empty
+    tuple is the pipeline-off configuration, bit-for-bit identical to the
+    pre-pipeline path.
+    """
 
     app: str
     mode: Interconnect
@@ -43,13 +55,14 @@ class SweepConfig:
     policy: str = "locality_first"
     scaling: str = "strong"
     kw: tuple = ()
+    opt: tuple = ()
 
     @classmethod
     def make(cls, app: str, mode: Interconnect, geometry: DeviceGeometry,
              policy: str = "locality_first", scaling: str = "strong",
-             **kw) -> "SweepConfig":
+             opt: Sequence[str] = (), **kw) -> "SweepConfig":
         return cls(app, mode, geometry, policy, scaling,
-                   tuple(sorted(kw.items())))
+                   tuple(sorted(kw.items())), tuple(opt))
 
     @property
     def kwargs(self) -> dict:
@@ -72,9 +85,16 @@ class BatchRunner:
     def run_one(self, cfg: SweepConfig) -> DeviceScheduleResult:
         # pass the cached structural graph; schedule() materializes the
         # durations for cfg.mode itself (exactly once)
-        g = partition.partitioned_struct(cfg.app, cfg.geometry,
-                                         policy=cfg.policy,
-                                         scaling=cfg.scaling, **cfg.kwargs)
+        if cfg.opt:
+            g = partition.optimized_struct(cfg.app, cfg.geometry,
+                                           policy=cfg.policy,
+                                           scaling=cfg.scaling, opt=cfg.opt,
+                                           **cfg.kwargs)
+        else:
+            g = partition.partitioned_struct(cfg.app, cfg.geometry,
+                                             policy=cfg.policy,
+                                             scaling=cfg.scaling,
+                                             **cfg.kwargs)
         return dev_sched.schedule(g, cfg.mode, cfg.geometry,
                                   model=self._model(cfg.mode, cfg.geometry))
 
@@ -101,5 +121,6 @@ def clear_caches() -> None:
     from repro.core import taskgraph
 
     partition._partitioned_struct.cache_clear()
+    partition._optimized_struct.cache_clear()
     for fn, _sig in taskgraph._STRUCTS.values():
         fn.cache_clear()

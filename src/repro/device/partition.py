@@ -25,26 +25,38 @@ right virtual PE count for the geometry (``strong`` scaling: one
 fixed-size problem over all banks; ``weak``: one bank-sized replica per bank
 plus a cross-bank reduction onto bank 0) and applies a policy.
 
+Placement runs as a stage of the :mod:`repro.passes` pipeline: the app
+builders emit *logical* graphs on virtual PEs, and
+``validate -> place -> legalize`` turns them physical (the policies below
+are what the place stage applies).  :func:`optimized_struct` additionally
+runs the optimization stage — self-move elimination, broadcast coalescing,
+move fusion — and memoizes the optimized artifact per pipeline
+configuration, so sweeps pay for each (cell, pipeline) combination once.
+With no optimization passes the pipeline is **off** and the placed graph is
+bit-for-bit the pre-pipeline one (golden schedules assert this).
+
 Placement and composition are **mode independent** (only op durations vary
 with the interconnect), so the placed graph for one (app, geometry, policy,
 scaling, problem-size) cell is built once as a structural
 :class:`~repro.core.ir.TaskGraph` (``functools.lru_cache``) and materialized
 per mode — the fast path :class:`repro.device.batch.BatchRunner` sweeps
-over.  The legacy ``list[Task]`` API is preserved as converting wrappers.
+over.  The legacy ``list[Task]`` API is preserved as converting wrappers
+routed through the same IR remap (:func:`_remap_ir`), so placement logic
+exists exactly once.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 
+from repro import passes as passlib
 from repro.core import ir, taskgraph
 from repro.core.ir import MOVE, NONE_SENTINEL, TaskGraph
 from repro.core.pluto import Interconnect
-from repro.core.scheduler import Task, _dsts
 from repro.device.geometry import DeviceGeometry
 
 POLICIES = ("round_robin", "locality_first", "bandwidth_balanced")
@@ -57,18 +69,9 @@ def _block_weights(tasks, geom: DeviceGeometry) -> list[float]:
     """Cross-block row traffic incident to each contiguous virtual block."""
     if isinstance(tasks, TaskGraph):
         return _block_weights_ir(tasks, geom)
-    ppb = geom.pes_per_bank
-    w = [0.0] * geom.n_banks
-    for t in tasks:
-        if t.kind != "move":
-            continue
-        sb = (t.src % geom.total_pes) // ppb
-        for d in _dsts(t):
-            db = (d % geom.total_pes) // ppb
-            if db != sb:
-                w[sb] += t.rows
-                w[db] += t.rows
-    return w
+    # legacy task lists convert to the IR so the weighting exists once;
+    # integer row counts sum exactly in float64, so the result is identical
+    return _block_weights_ir(ir.from_tasks(tasks), geom)
 
 
 def _block_weights_ir(g: TaskGraph, geom: DeviceGeometry) -> list[float]:
@@ -129,19 +132,6 @@ def pe_map(geom: DeviceGeometry, policy: str,
 # --- applying a placement -------------------------------------------------------
 
 
-def _remap(tasks: Iterable[Task], pe_map: Sequence[int]) -> list[Task]:
-    out = []
-    for t in tasks:
-        out.append(dataclasses.replace(
-            t,
-            pe=None if t.pe is None else pe_map[t.pe],
-            src=None if t.src is None else pe_map[t.src],
-            dst=None if t.dst is None else (
-                tuple(pe_map[d] for d in t.dst) if isinstance(t.dst, tuple)
-                else pe_map[t.dst])))
-    return out
-
-
 def _remap_ir(g: TaskGraph, m: np.ndarray) -> TaskGraph:
     """Apply a virtual-PE -> global-PE map to every pe/src/dst array."""
     pe = np.where(g.pe == NONE_SENTINEL, NONE_SENTINEL,
@@ -174,11 +164,18 @@ def lease_pe_map(geom: DeviceGeometry, banks: Sequence[int],
     banks = list(banks)
     if not banks:
         raise ValueError("a lease needs at least one bank")
-    if len(set(banks)) != len(banks):
-        raise ValueError(f"duplicate banks in lease: {banks}")
-    bad = [b for b in banks if not 0 <= b < geom.n_banks]
+    seen: set[int] = set()
+    dups: set[int] = set()
+    for b in banks:
+        (dups if b in seen else seen).add(b)
+    if dups:
+        raise ValueError(
+            f"duplicate banks in lease: {sorted(dups)} (lease was {banks})")
+    bad = sorted({b for b in banks if not 0 <= b < geom.n_banks})
     if bad:
-        raise ValueError(f"banks {bad} out of range [0, {geom.n_banks})")
+        raise ValueError(
+            f"banks {bad} out of range [0, {geom.n_banks}) "
+            f"for {geom.describe()}")
     ppb = geom.pes_per_bank
     sub = DeviceGeometry(channels=1, banks_per_channel=len(banks),
                          pes_per_bank=ppb)
@@ -199,31 +196,25 @@ def place(tasks, geom: DeviceGeometry,
 
     Accepts and returns either representation: a legacy task list yields a
     task list, a :class:`TaskGraph` yields a placed :class:`TaskGraph`.
+    Both routes apply the same IR remap (:func:`_remap_ir`) — the legacy
+    path converts through :mod:`repro.core.ir` rather than keeping a twin
+    per-Task implementation.
     """
     if isinstance(tasks, TaskGraph):
         return place_ir(tasks, geom, policy)
-    tasks = list(tasks)
-    return _remap(tasks, pe_map(geom, policy, tasks))
+    g = ir.from_tasks(tasks)
+    return ir.to_tasks(place_ir(g, geom, policy))
 
 
 def cross_traffic_rows(tasks, geom: DeviceGeometry) -> int:
     """Row deliveries whose endpoints sit in different banks (diagnostic)."""
-    if isinstance(tasks, TaskGraph):
-        g = tasks
-        counts = np.diff(g.dst_indptr)
-        src_bank = np.repeat((g.src % geom.total_pes)
-                             // geom.pes_per_bank, counts)
-        rows = np.repeat(np.where(g.kinds == MOVE, g.rows, 0), counts)
-        dst_bank = (g.dst_flat % geom.total_pes) // geom.pes_per_bank
-        return int(rows[src_bank != dst_bank].sum())
-    n = 0
-    for t in tasks:
-        if t.kind != "move":
-            continue
-        sb = geom.bank_of(t.src % geom.total_pes)
-        n += sum(t.rows for d in _dsts(t)
-                 if geom.bank_of(d % geom.total_pes) != sb)
-    return n
+    g = tasks if isinstance(tasks, TaskGraph) else ir.from_tasks(tasks)
+    counts = np.diff(g.dst_indptr)
+    src_bank = np.repeat((g.src % geom.total_pes)
+                         // geom.pes_per_bank, counts)
+    rows = np.repeat(np.where(g.kinds == MOVE, g.rows, 0), counts)
+    dst_bank = (g.dst_flat % geom.total_pes) // geom.pes_per_bank
+    return int(rows[src_bank != dst_bank].sum())
 
 
 # --- partitioned app composition ------------------------------------------------
@@ -243,7 +234,10 @@ def _partitioned_struct(app: str, geom: DeviceGeometry, policy: str,
         if app in ("bfs", "dfs"):
             kw.setdefault("n_stripes", geom.n_banks)
         g = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
-        return ir.freeze(place_ir(g, geom, policy))
+        # the logical graph turns physical through the pass pipeline with
+        # no optimization stage (pipeline off == the pre-pipeline placement)
+        placed, _log = passlib.device_pipeline(geom, policy).run(g)
+        return ir.freeze(placed)
     if scaling != "weak":
         raise ValueError(f"scaling must be 'weak' or 'strong', got {scaling!r}")
 
@@ -375,6 +369,52 @@ def partitioned_struct(app: str, geom: DeviceGeometry,
                                tuple(sorted(kw.items())))
 
 
+def _cell_pipeline(geom: DeviceGeometry, opt: tuple) -> "passlib.Pipeline":
+    return passlib.optimization_pipeline(opt, pes_per_bank=geom.pes_per_bank,
+                                         total_pes=geom.total_pes)
+
+
+@functools.lru_cache(maxsize=None)
+def _optimized_struct(app: str, geom: DeviceGeometry, policy: str,
+                      scaling: str, opt: tuple, fingerprint: str,
+                      kw_items: tuple):
+    base = _partitioned_struct(app, geom, policy, scaling, kw_items)
+    g, log = _cell_pipeline(geom, opt).run(base)
+    return ir.freeze(g), log
+
+
+def optimized_struct(app: str, geom: DeviceGeometry,
+                     policy: str = "locality_first",
+                     scaling: str = "strong",
+                     opt: Sequence[str] = passlib.DEFAULT_OPT,
+                     **kw) -> TaskGraph:
+    """Pass-optimized placed graph for one sweep cell (memoized).
+
+    Runs the :mod:`repro.passes` optimization stage (``opt`` names the
+    passes; ``()`` returns the placed graph unchanged) on top of the cached
+    placement artifact, memoized per (cell, pipeline) — the pipeline's
+    fingerprint (digesting each pass's full configuration, not just its
+    name) is part of the cache key, so two sweeps sharing a pipeline share
+    the optimized artifact and differently-configured pipelines never do.
+    """
+    opt = tuple(opt)
+    return _optimized_struct(app, geom, policy, scaling, opt,
+                             _cell_pipeline(geom, opt).fingerprint(),
+                             tuple(sorted(kw.items())))[0]
+
+
+def optimization_log(app: str, geom: DeviceGeometry,
+                     policy: str = "locality_first",
+                     scaling: str = "strong",
+                     opt: Sequence[str] = passlib.DEFAULT_OPT,
+                     **kw) -> passlib.RewriteLog:
+    """The rewrite log behind :func:`optimized_struct` for the same cell."""
+    opt = tuple(opt)
+    return _optimized_struct(app, geom, policy, scaling, opt,
+                             _cell_pipeline(geom, opt).fingerprint(),
+                             tuple(sorted(kw.items())))[1]
+
+
 def build_partitioned_ir(app: str, mode: Interconnect, geom: DeviceGeometry,
                          policy: str = "locality_first",
                          scaling: str = "strong", **kw) -> TaskGraph:
@@ -385,7 +425,7 @@ def build_partitioned_ir(app: str, mode: Interconnect, geom: DeviceGeometry,
 
 def build_partitioned(app: str, mode: Interconnect, geom: DeviceGeometry,
                       policy: str = "locality_first",
-                      scaling: str = "strong", **kw) -> list[Task]:
+                      scaling: str = "strong", **kw) -> list:
     """Build one of the paper's apps split across every bank of the device.
 
     ``strong``: the problem keeps its size and its graph spans the whole

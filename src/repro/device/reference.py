@@ -22,8 +22,27 @@ from repro.core.reference import Bank, _move_latency, _topo_order
 from repro.core.scheduler import Task, _dsts
 from repro.device import interconnect as xbar
 from repro.device.geometry import DeviceGeometry, SINGLE_BANK
-from repro.device.partition import _remap, pe_map
+from repro.device.partition import pe_map
 from repro.device.scheduler import DeviceScheduleResult
+
+
+def _remap(tasks: Iterable[Task], pe_map: Sequence[int]) -> list[Task]:
+    """The pre-refactor per-Task placement remap, preserved verbatim.
+
+    The live partitioner routes every representation through the one IR
+    remap (:func:`repro.device.partition._remap_ir`); this copy exists only
+    so the legacy baseline this module preserves stays self-contained.
+    """
+    out = []
+    for t in tasks:
+        out.append(dataclasses.replace(
+            t,
+            pe=None if t.pe is None else pe_map[t.pe],
+            src=None if t.src is None else pe_map[t.src],
+            dst=None if t.dst is None else (
+                tuple(pe_map[d] for d in t.dst) if isinstance(t.dst, tuple)
+                else pe_map[t.dst])))
+    return out
 
 
 class _DeviceState:

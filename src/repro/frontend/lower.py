@@ -37,6 +37,17 @@ Graph *structure* is interconnect independent: ops carry symbolic
 "add"/"mul" classes and :func:`repro.core.ir.materialize` prices them per
 mode, exactly like the Fig-8 builders, so one cached lowering serves every
 (interconnect, placement, lease) combination of a sweep.
+
+The lowering is deliberately **eager and logical**: every operand hand-off,
+expert broadcast, and partial-sum move is emitted on virtual PEs exactly
+where the dataflow says one exists, with no physical cleverness baked in.
+Deciding which of those moves are redundant *once placement is known* —
+same-bank hand-offs of the same value coalescing into one broadcast,
+store-and-forward chains fusing — is the :mod:`repro.passes` pipeline's
+job (``validate -> place -> optimize -> legalize``); keeping the frontend
+blind to it means one lowering serves every placement, and every
+optimization is recorded in the pipeline's rewrite log instead of being
+invisible frontend folklore.
 """
 
 from __future__ import annotations

@@ -1,0 +1,96 @@
+"""Pass-based IR optimizer: placement and move optimization as a pipeline.
+
+The app builders (:mod:`repro.core.taskgraph`) and the model frontend
+(:mod:`repro.frontend`) emit *logical* graphs on virtual PEs; this package
+turns them physical through a staged compiler pipeline::
+
+    validate -> place -> optimize -> legalize
+
+Placement passes wrap the existing :mod:`repro.device.partition` policies
+(``round_robin`` / ``locality_first`` / ``bandwidth_balanced`` and bank-set
+leases); optimization passes exploit post-placement knowledge to delete
+self-moves, coalesce same-value hand-offs into broadcasts, and fuse
+store-and-forward move chains.  Every pass is a pure
+``TaskGraph -> TaskGraph`` function with a recorded rewrite log.
+
+Quickstart::
+
+    from repro import passes
+    from repro.core import taskgraph
+    from repro.device.geometry import DeviceGeometry
+
+    geom = DeviceGeometry(channels=1, banks_per_channel=4)
+    pipe = passes.device_pipeline(geom, policy="locality_first",
+                                  opt=passes.DEFAULT_OPT)
+    g, log = pipe.run(taskgraph.structural("qwen2-moe-a2.7b",
+                                           n_pes=geom.total_pes,
+                                           phase="decode", n_layers=2))
+    print(log.summary(), "\\n", log)
+
+An *empty* ``opt`` tuple is the pipeline-off configuration: placement only,
+bit-for-bit identical to the pre-pipeline path (asserted against the golden
+schedules by ``benchmarks/passes.py`` and ``tests/test_passes.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.passes.optimize import (DEFAULT_OPT, OPT_PASSES,  # noqa: F401
+                                   BroadcastCoalescePass, MoveFusionPass,
+                                   SelfMoveEliminationPass)
+from repro.passes.pipeline import (STAGES, Pass, Pipeline,  # noqa: F401
+                                   Rewrite, RewriteLog)
+from repro.passes.placement import (LeasePlacePass, LegalizePass,  # noqa: F401
+                                    PlacePass, ValidatePass)
+from repro.passes.rewrite import graphs_equal, rebuild  # noqa: F401
+
+
+def optimization_passes(names: Sequence[str] = DEFAULT_OPT, *,
+                        pes_per_bank: int | None = None) -> tuple[Pass, ...]:
+    """Instantiate optimization passes from registry names (order kept).
+
+    ``pes_per_bank`` tells the hop-aware passes where bank boundaries lie
+    on the placed graph; ``None`` treats the PE space as one bank (the
+    single-bank scheduler's view).
+    """
+    out = []
+    for name in names:
+        factory = OPT_PASSES.get(name)
+        if factory is None:
+            raise ValueError(f"unknown optimization pass {name!r}; "
+                             f"known: {sorted(OPT_PASSES)}")
+        out.append(factory(pes_per_bank))
+    return tuple(out)
+
+
+def optimization_pipeline(names: Sequence[str] = DEFAULT_OPT, *,
+                          pes_per_bank: int | None = None,
+                          total_pes: int | None = None) -> Pipeline:
+    """validate -> optimize -> legalize over an already-placed graph."""
+    return Pipeline([
+        ValidatePass(),
+        *optimization_passes(names, pes_per_bank=pes_per_bank),
+        LegalizePass(total_pes)])
+
+
+def device_pipeline(geom, policy: str = "locality_first", *,
+                    opt: Sequence[str] = ()) -> Pipeline:
+    """The full pipeline for one device placement policy.
+
+    ``opt`` names the optimization passes to run (``()`` = pipeline off —
+    placement only, the pre-pipeline behavior).
+    """
+    return Pipeline([
+        ValidatePass(), PlacePass(geom, policy),
+        *optimization_passes(opt, pes_per_bank=geom.pes_per_bank),
+        LegalizePass(geom.total_pes)])
+
+
+def lease_pipeline(geom, banks, policy: str = "locality_first", *,
+                   opt: Sequence[str] = ()) -> Pipeline:
+    """The full pipeline for a bank-set lease (serving runtime placement)."""
+    return Pipeline([
+        ValidatePass(), LeasePlacePass(geom, banks, policy),
+        *optimization_passes(opt, pes_per_bank=geom.pes_per_bank),
+        LegalizePass(geom.total_pes)])

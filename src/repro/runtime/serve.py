@@ -4,11 +4,16 @@
 goal asks for: a trace of :class:`~repro.runtime.trace.JobRequest` arrivals
 is admitted against a :class:`~repro.runtime.allocator.BankAllocator`
 (bank-set leases, FIFO / SJF / priority admission), each admitted job's
-graph is built for its lease via the ordinary partitioner placement
-(:func:`repro.device.partition.place_on_banks`) and spliced into a live
-:class:`~repro.core.engine.EngineSession` — so tenants contend for bank
-tokens, shared buses, and (with a :class:`~repro.core.engine.RefreshSpec`)
-refresh windows through exactly the machinery the offline scheduler uses.
+*logical* graph runs through the :mod:`repro.passes` lease pipeline —
+``validate -> lease-place -> optimize -> legalize``, where the place stage
+is the ordinary partitioner placement
+(:func:`repro.device.partition.place_on_banks`) and the optimize stage is
+whatever passes the runtime was configured with (none by default: the
+pipeline-off path is bit-for-bit the pre-pipeline one) — and is spliced
+into a live :class:`~repro.core.engine.EngineSession`, so tenants contend
+for bank tokens, shared buses, and (with a
+:class:`~repro.core.engine.RefreshSpec`) refresh windows through exactly
+the machinery the offline scheduler uses.
 The driver advances the session between arrival horizons, releases leases
 as jobs complete, and reports per-job latency.
 
@@ -24,13 +29,13 @@ import heapq
 
 import numpy as np
 
+from repro import passes as passlib
 from repro.core import ir, taskgraph
 from repro.core.engine import EngineSession, RefreshSpec
 from repro.core.ir import TaskGraph
 from repro.core.pluto import Interconnect
 from repro.device.geometry import DeviceGeometry
 from repro.device.resources import DeviceModel
-from repro.device import partition
 from repro.runtime.allocator import BankAllocator, Lease
 from repro.runtime.trace import ClosedLoopSource, JobRequest
 
@@ -72,6 +77,7 @@ class ServingRuntime:
     def __init__(self, mode: Interconnect, geom: DeviceGeometry, *,
                  admission: str = "fifo",
                  placement: str = "locality_first",
+                 opt: tuple[str, ...] = (),
                  refresh: RefreshSpec | None = None,
                  model: DeviceModel | None = None):
         if model is None:
@@ -79,9 +85,11 @@ class ServingRuntime:
         self.mode = mode
         self.geom = geom
         self.placement = placement
+        self.opt = tuple(opt)
         self.session = EngineSession(model, refresh=refresh)
         self.allocator = BankAllocator(geom, admission)
         self.results: list[JobResult] = []
+        self.rewrite_logs: dict = {}  # (app, kw, banks) -> RewriteLog
         self._graphs: dict = {}      # (app, kw, banks) -> materialized graph
         self._live: dict = {}        # engine job id -> (request, lease, at)
 
@@ -94,8 +102,10 @@ class ServingRuntime:
         if g is None:
             struct = taskgraph.structural(
                 t.app, n_pes=len(banks) * self.geom.pes_per_bank, **t.kwargs)
-            placed = partition.place_on_banks(struct, self.geom, banks,
-                                              self.placement)
+            pipe = passlib.lease_pipeline(self.geom, banks, self.placement,
+                                          opt=self.opt)
+            placed, log = pipe.run(struct)
+            self.rewrite_logs[key] = log
             g = self._graphs[key] = ir.materialize(placed, self.mode)
         return g
 

@@ -1,0 +1,475 @@
+"""Pass pipeline: unit, golden-equivalence, and property tests.
+
+Three layers:
+
+* unit tests pin each optimization pass's rewrite semantics on handcrafted
+  graphs (elimination, hop-aware coalescing, chain fusion, dep rewiring);
+* the pipeline-off configuration is checked bit-for-bit against
+  ``tests/golden_schedules.json`` — running placement as a pass must not
+  change a single float of any golden schedule;
+* property tests (hypothesis + seeded cells): every optimization pass
+  preserves graph validity, never grows the task count or the total
+  interconnect demand, is idempotent, and strictly improves (never hurts)
+  Shared-PIM makespan on the move-heavy benchmark cells.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
+
+from capture_goldens import (APP_KW, GEOMETRIES, SYNTH, core_record,
+                             device_record)
+from repro import passes
+from repro.core import ir, taskgraph
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+from repro.core import scheduler as core_sched
+from repro.device import DeviceGeometry, partition
+from repro.device import scheduler as dev_sched
+from repro.passes import graphs_equal
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_schedules.json").read_text())
+
+BIG = DeviceGeometry(**GEOMETRIES["2ch_4banks_2groups"])
+
+
+def run_default(tasks_or_graph, pes_per_bank=None):
+    g = tasks_or_graph if isinstance(tasks_or_graph, ir.TaskGraph) \
+        else ir.from_tasks(tasks_or_graph)
+    pipe = passes.optimization_pipeline(passes.DEFAULT_OPT,
+                                        pes_per_bank=pes_per_bank)
+    return pipe.run(g)
+
+
+class TestSelfMoveElimination:
+    def test_drops_and_rewires(self):
+        g, log = run_default([
+            Task(0, "op", pe=1, duration=5.0),
+            Task(1, "move", deps=(0,), src=3, dst=3, rows=2),
+            Task(2, "op", deps=(1,), pe=3, duration=1.0),
+        ])
+        assert log.summary()["eliminated"] == 1
+        out = ir.to_tasks(g)
+        assert [t.uid for t in out] == [0, 2]
+        assert out[1].deps == (0,)       # rewired through the dropped move
+
+    def test_broadcast_to_self_only(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=2, dst=(2, 2), rows=1),
+            Task(2, "op", deps=(1,), pe=2, duration=1.0),
+        ])
+        assert log.summary()["eliminated"] == 1
+        assert g.n == 2
+
+    def test_chain_of_self_moves(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=1, dst=1),
+            Task(2, "move", deps=(1,), src=1, dst=1),
+            Task(3, "op", deps=(2,), pe=1, duration=1.0),
+        ])
+        assert log.summary()["eliminated"] == 2
+        assert ir.to_tasks(g)[1].deps == (0,)
+
+    def test_mixed_dst_broadcast_survives(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=2, dst=(2, 5), rows=1),
+        ])
+        assert log.summary()["eliminated"] == 0
+        assert g.n == 2
+
+
+class TestBroadcastCoalesce:
+    def tasks(self, dst_a, dst_b, rows_b=1):
+        return [
+            Task(0, "op", pe=0, duration=10.0),
+            Task(1, "move", deps=(0,), src=0, dst=dst_a, rows=1),
+            Task(2, "move", deps=(0,), src=0, dst=dst_b, rows=rows_b),
+            Task(3, "op", deps=(1,), pe=4, duration=1.0),
+            Task(4, "op", deps=(2,), pe=5, duration=1.0),
+        ]
+
+    def test_same_bank_handoffs_merge(self):
+        g, log = run_default(self.tasks(4, 5), pes_per_bank=16)
+        assert log.summary()["coalesced"] == 1
+        merged = ir.to_tasks(g)[1]
+        assert merged.dst == (4, 5)
+        # both consumers depend on the merged move
+        assert ir.to_tasks(g)[2].deps == (1,)
+        assert ir.to_tasks(g)[3].deps == (1,)
+
+    def test_cross_bank_handoffs_stay_separate(self):
+        # PEs 4 and 20 live in different banks (16 PEs per bank): merging
+        # would make bank-0 consumers wait for the bank-1 delivery
+        g, log = run_default(self.tasks(4, 20), pes_per_bank=16)
+        assert log.summary()["coalesced"] == 0
+        assert g.n == 5
+
+    def test_single_bank_view_merges_everything(self):
+        g, log = run_default(self.tasks(4, 20), pes_per_bank=None)
+        assert log.summary()["coalesced"] == 1
+
+    def test_different_rows_stay_separate(self):
+        g, log = run_default(self.tasks(4, 5, rows_b=3), pes_per_bank=16)
+        assert log.summary()["coalesced"] == 0
+
+    def test_different_deps_stay_separate(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "op", pe=0, duration=1.0),
+            Task(2, "move", deps=(0,), src=0, dst=4),
+            Task(3, "move", deps=(1,), src=0, dst=5),
+        ], pes_per_bank=16)
+        assert log.summary()["coalesced"] == 0
+
+    def test_existing_cross_bank_broadcast_untouched(self):
+        # a move whose own destinations span banks is a deliberate
+        # broadcast; it neither merges nor blocks same-bank merging
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=0, dst=(4, 20), rows=1),
+            Task(2, "move", deps=(0,), src=0, dst=5, rows=1),
+            Task(3, "move", deps=(0,), src=0, dst=6, rows=1),
+        ], pes_per_bank=16)
+        assert log.summary()["coalesced"] == 1
+        dsts = sorted(tuple(g.dsts_of(i)) for i in range(g.n)
+                      if g.kinds[i] == ir.MOVE)
+        assert dsts == [(4, 20), (5, 6)]
+
+
+class TestMoveFusion:
+    def test_two_leg_chain_fuses(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=0, dst=3, rows=2),
+            Task(2, "move", deps=(1,), src=3, dst=7, rows=2),
+            Task(3, "op", deps=(2,), pe=7, duration=1.0),
+        ])
+        assert log.summary()["fused"] == 1
+        fused = ir.to_tasks(g)[1]
+        assert (fused.src, fused.dst, fused.deps) == (0, 7, (0,))
+
+    def test_three_leg_chain_fuses_to_one(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=0, dst=3),
+            Task(2, "move", deps=(1,), src=3, dst=7),
+            Task(3, "move", deps=(2,), src=7, dst=9),
+            Task(4, "op", deps=(3,), pe=9, duration=1.0),
+        ])
+        assert log.summary()["fused"] == 2
+        assert g.n == 3
+
+    def test_intermediate_with_second_reader_blocks_fusion(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=0, dst=3),
+            Task(2, "move", deps=(1,), src=3, dst=7),
+            Task(3, "op", deps=(1,), pe=3, duration=1.0),   # reads at B
+        ])
+        assert log.summary()["fused"] == 0
+
+    def test_row_mismatch_blocks_fusion(self):
+        g, log = run_default([
+            Task(0, "op", pe=0, duration=1.0),
+            Task(1, "move", deps=(0,), src=0, dst=3, rows=2),
+            Task(2, "move", deps=(1,), src=3, dst=7, rows=1),
+        ])
+        assert log.summary()["fused"] == 0
+
+    def test_round_trip_chain_is_dead(self):
+        g, log = run_default([
+            Task(0, "op", pe=2, duration=1.0),
+            Task(1, "move", deps=(0,), src=2, dst=5),
+            Task(2, "move", deps=(1,), src=5, dst=2),
+            Task(3, "op", deps=(2,), pe=2, duration=1.0),
+        ])
+        assert log.summary()["eliminated"] == 2
+        out = ir.to_tasks(g)
+        assert [t.uid for t in out] == [0, 3]
+        assert out[1].deps == (0,)
+
+
+class TestPipelineMechanics:
+    def test_stage_order_enforced(self):
+        with pytest.raises(ValueError, match="stage order"):
+            passes.Pipeline([passes.LegalizePass(), passes.ValidatePass()])
+
+    def test_unknown_pass_name(self):
+        with pytest.raises(ValueError, match="unknown optimization pass"):
+            passes.optimization_passes(("no_such_pass",))
+
+    def test_fingerprint_tracks_configuration(self):
+        a = passes.optimization_pipeline(passes.DEFAULT_OPT)
+        b = passes.optimization_pipeline(passes.DEFAULT_OPT)
+        c = passes.optimization_pipeline(("self_move_elim",))
+        d = passes.optimization_pipeline(passes.DEFAULT_OPT, pes_per_bank=8)
+        assert a.fingerprint() == b.fingerprint()
+        assert a.fingerprint() != c.fingerprint()
+        assert a.fingerprint() != d.fingerprint()
+
+    def test_noop_run_returns_input_unchanged(self):
+        g = partition.partitioned_struct("mm", BIG, n=20)
+        out, log = passes.optimization_pipeline(()).run(g)
+        assert out is g and len(log) == 0
+
+    def test_passes_do_not_mutate_input(self):
+        tasks = [Task(0, "op", pe=0, duration=1.0),
+                 Task(1, "move", deps=(0,), src=1, dst=1),
+                 Task(2, "move", deps=(1,), src=1, dst=4)]
+        g = ir.from_tasks(tasks)
+        snapshot = {f: getattr(g, f).copy()
+                    for f in ("uids", "kinds", "dep_pos", "src", "dst_flat")}
+        run_default(g)
+        for f, arr in snapshot.items():
+            assert np.array_equal(getattr(g, f), arr)
+
+    def test_legalize_rejects_out_of_range_endpoints(self):
+        g = ir.from_tasks([Task(0, "op", pe=99, duration=1.0)])
+        with pytest.raises(ValueError, match="outside"):
+            passes.LegalizePass(total_pes=16).run(g, passes.RewriteLog())
+
+
+class TestPipelineOffGoldens:
+    """A no-op pipeline reproduces the golden schedules bit-for-bit."""
+
+    @pytest.mark.parametrize("app", sorted(APP_KW))
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_core_pipeline_off(self, app, mode):
+        g = taskgraph.build_ir(app, mode, opt=(), **APP_KW[app])
+        rec = core_record(core_sched.schedule(g, mode))
+        assert rec == GOLDEN["core"][f"{app}/{mode.value}"]
+
+    @pytest.mark.parametrize("gname", sorted(GEOMETRIES))
+    @pytest.mark.parametrize("app", sorted(APP_KW))
+    def test_device_pipeline_off(self, gname, app):
+        geom = DeviceGeometry(**GEOMETRIES[gname])
+        for scaling in ("strong", "weak"):
+            policies = (("locality_first", "round_robin",
+                         "bandwidth_balanced")
+                        if scaling == "strong" and geom.n_banks > 1
+                        else ("locality_first",))
+            for policy in policies:
+                off = partition.optimized_struct(
+                    app, geom, policy=policy, scaling=scaling, opt=(),
+                    **APP_KW[app])
+                assert graphs_equal(off, partition.partitioned_struct(
+                    app, geom, policy=policy, scaling=scaling,
+                    **APP_KW[app]))
+                for mode in Interconnect:
+                    rec = device_record(dev_sched.schedule(off, mode, geom))
+                    key = f"{app}/{mode.value}/{gname}/{scaling}/{policy}"
+                    assert rec == GOLDEN["device"][key], key
+
+    @pytest.mark.parametrize("name", sorted(SYNTH))
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_synth_pipeline_off(self, name, mode):
+        g, log = passes.optimization_pipeline(
+            (), total_pes=BIG.total_pes).run(ir.from_tasks(SYNTH[name]))
+        assert len(log) == 0
+        rec = device_record(dev_sched.schedule(g, mode, BIG))
+        assert rec == GOLDEN["synth"][f"{name}/{mode.value}"]
+
+
+# --- property tests ---------------------------------------------------------------
+
+
+@st.composite
+def random_logical_dag(draw):
+    """Random graphs rich in self-moves, duplicate hand-offs, and chains."""
+    n = draw(st.integers(3, 28))
+    total = BIG.total_pes
+    tasks = []
+    for i in range(n):
+        deps = tuple(d for d in range(max(0, i - 4), i)
+                     if draw(st.booleans()))
+        kind = draw(st.integers(0, 3))
+        if kind == 0:
+            tasks.append(Task(i, "op", deps=deps,
+                              pe=draw(st.integers(0, total - 1)),
+                              duration=draw(st.floats(1.0, 1e3))))
+        elif kind == 1:                      # possible self-move
+            pe = draw(st.integers(0, total - 1))
+            tasks.append(Task(i, "move", deps=deps, src=pe, dst=pe,
+                              rows=draw(st.integers(1, 4))))
+        elif kind == 2 and i > 0 and tasks[i - 1].kind == "move" \
+                and not isinstance(tasks[i - 1].dst, tuple):
+            # extend a chain from the previous move's destination
+            tasks.append(Task(i, "move", deps=(i - 1,),
+                              src=tasks[i - 1].dst,
+                              dst=draw(st.integers(0, total - 1)),
+                              rows=tasks[i - 1].rows))
+        else:
+            src = draw(st.integers(0, total - 1))
+            dst = draw(st.integers(0, total - 1))
+            tasks.append(Task(i, "move", deps=deps, src=src, dst=dst,
+                              rows=draw(st.integers(1, 4))))
+    return tasks
+
+
+def _schedule_pair(tasks, pes_per_bank):
+    g = ir.from_tasks(tasks)
+    pipe = passes.optimization_pipeline(passes.DEFAULT_OPT,
+                                        pes_per_bank=pes_per_bank,
+                                        total_pes=BIG.total_pes)
+    out, log = pipe.run(g)
+    return g, out, log
+
+
+class TestPassProperties:
+    @hypothesis.given(random_logical_dag())
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_validity_and_shrinkage(self, tasks):
+        g, out, log = _schedule_pair(tasks, BIG.pes_per_bank)
+        out.validate()                       # no cycles, no dangling deps
+        assert out.n <= g.n
+        assert out.n == g.n - log.count("eliminate") - log.count("coalesce") \
+            - log.count("fuse")
+        # uids of surviving tasks are a subset of the originals
+        assert set(out.uids.tolist()) <= set(g.uids.tolist())
+
+    @hypothesis.given(random_logical_dag(),
+                      st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_interconnect_demand_never_increases(self, tasks, mode):
+        """Total move occupancy (and op time) never grows under any pass."""
+        g, out, _log = _schedule_pair(tasks, BIG.pes_per_bank)
+        before = dev_sched.schedule(g, mode, BIG)
+        after = dev_sched.schedule(out, mode, BIG)
+        assert after.move_busy_ns <= before.move_busy_ns + 1e-6
+        # op work is untouched (only float accumulation order may differ)
+        assert after.op_busy_ns == pytest.approx(before.op_busy_ns)
+        assert after.n_rows_moved <= before.n_rows_moved
+
+    @hypothesis.given(random_logical_dag())
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_idempotent(self, tasks):
+        _g, out, _log = _schedule_pair(tasks, BIG.pes_per_bank)
+        out2, log2 = passes.optimization_pipeline(
+            passes.DEFAULT_OPT, pes_per_bank=BIG.pes_per_bank).run(out)
+        assert len(log2) == 0
+        assert graphs_equal(out, out2)
+
+    #: the benchmark's move-heavy cells: Shared-PIM makespan must strictly
+    #: improve (matmul partial-sum reductions / MoE expert fan-out), and on
+    #: ordinary Fig-8 cells the passes must find nothing and change nothing
+    CELLS = [
+        ("gemma3-1b", DeviceGeometry(channels=1, banks_per_channel=4),
+         dict(phase="prefill", n_layers=4, seq_tiles=4), "improves"),
+        ("qwen2-moe-a2.7b",
+         DeviceGeometry(channels=1, banks_per_channel=4, pes_per_bank=8),
+         dict(phase="prefill", n_layers=2, seq_tiles=2), "improves"),
+        ("mm", DeviceGeometry(channels=1, banks_per_channel=4),
+         dict(n=20), "unchanged"),
+        ("ntt", DeviceGeometry(channels=1, banks_per_channel=4),
+         dict(n=32), "unchanged"),
+    ]
+
+    @pytest.mark.parametrize("app,geom,kw,expect",
+                             CELLS, ids=[c[0] for c in CELLS])
+    def test_benchmark_cells_makespan(self, app, geom, kw, expect):
+        off = partition.partitioned_struct(app, geom, **kw)
+        on = partition.optimized_struct(app, geom, **kw)
+        log = partition.optimization_log(app, geom, **kw)
+        sp_off = dev_sched.schedule(off, Interconnect.SHARED_PIM, geom)
+        sp_on = dev_sched.schedule(on, Interconnect.SHARED_PIM, geom)
+        if expect == "improves":
+            assert len(log) > 0
+            assert sp_on.makespan_ns < sp_off.makespan_ns
+        else:
+            assert len(log) == 0
+            assert graphs_equal(off, on)
+            assert sp_on.makespan_ns == sp_off.makespan_ns
+
+
+class TestLeaseValidation:
+    """Satellite: lease placement names the offending banks."""
+
+    GEOM = DeviceGeometry(channels=1, banks_per_channel=4)
+
+    def test_duplicates_named(self):
+        with pytest.raises(ValueError) as e:
+            partition.lease_pe_map(self.GEOM, [1, 2, 1, 3, 3])
+        assert "[1, 3]" in str(e.value)
+
+    def test_out_of_range_named(self):
+        with pytest.raises(ValueError) as e:
+            partition.lease_pe_map(self.GEOM, [0, 7, -2])
+        assert "[-2, 7]" in str(e.value)
+        assert "[0, 4)" in str(e.value)
+
+    def test_place_on_banks_validates_too(self):
+        g = taskgraph.structural("mm", n_pes=self.GEOM.pes_per_bank, n=8)
+        with pytest.raises(ValueError, match="duplicate banks"):
+            partition.place_on_banks(g, self.GEOM, (2, 2))
+        with pytest.raises(ValueError, match="out of range"):
+            partition.place_on_banks(g, self.GEOM, (0, 9))
+
+
+class TestLegacyPlaceViaIR:
+    """Satellite: the legacy Task-list path routes through the IR remap."""
+
+    def test_place_task_list_matches_ir_path(self):
+        geom = DeviceGeometry(channels=2, banks_per_channel=2)
+        tasks = taskgraph.build("pmm", Interconnect.LISA, n=16,
+                                n_pes=geom.total_pes)
+        for policy in partition.POLICIES:
+            placed = partition.place(tasks, geom, policy)
+            via_ir = ir.to_tasks(partition.place_ir(ir.from_tasks(tasks),
+                                                    geom, policy))
+            assert placed == via_ir
+
+    def test_cross_traffic_rows_agrees_across_representations(self):
+        geom = DeviceGeometry(channels=1, banks_per_channel=4)
+        tasks = taskgraph.build("ntt", Interconnect.LISA, n=32,
+                                n_pes=geom.total_pes)
+        g = ir.from_tasks(tasks)
+        assert partition.cross_traffic_rows(tasks, geom) == \
+            partition.cross_traffic_rows(g, geom)
+
+
+class TestPipelineThroughStack:
+    """The batch runner and serving runtime speak the pipeline."""
+
+    def test_sweep_config_opt_matches_direct(self):
+        from repro.device.batch import BatchRunner, SweepConfig
+        geom = DeviceGeometry(channels=1, banks_per_channel=4)
+        cfgs = [SweepConfig.make("qwen2-moe-a2.7b", mode, geom,
+                                 opt=passes.DEFAULT_OPT, phase="decode",
+                                 n_layers=2)
+                for mode in Interconnect]
+        results = BatchRunner().run(cfgs)
+        for cfg, r in zip(cfgs, results):
+            g = partition.optimized_struct(cfg.app, geom,
+                                           opt=passes.DEFAULT_OPT,
+                                           **cfg.kwargs)
+            direct = dev_sched.schedule(g, cfg.mode, geom)
+            assert r.makespan_ns == direct.makespan_ns
+            assert r.finish_times == direct.finish_times
+
+    def test_serving_runtime_with_passes_completes(self):
+        from repro.runtime import ServingRuntime, TenantSpec, open_loop_trace
+        geom = DeviceGeometry(channels=1, banks_per_channel=4,
+                              pes_per_bank=8)
+        tenants = [TenantSpec.make("moe", "qwen2-moe-a2.7b", banks=2,
+                                   phase="prefill", n_layers=2, seq_tiles=2,
+                                   rate_jps=2000.0)]
+        trace = open_loop_trace(tenants, jobs_per_tenant=3, seed=0)
+        off = ServingRuntime(Interconnect.SHARED_PIM, geom)
+        on = ServingRuntime(Interconnect.SHARED_PIM, geom,
+                            opt=passes.DEFAULT_OPT)
+        r_off = off.run(trace)
+        r_on = on.run(trace)
+        assert len(r_on) == len(r_off) == 3
+        assert all(len(log) > 0 for log in on.rewrite_logs.values())
+        assert all(len(log) == 0 for log in off.rewrite_logs.values())
+        # the optimized runtime serves the same jobs no slower
+        assert max(r.finish_ns for r in r_on) <= \
+            max(r.finish_ns for r in r_off)
