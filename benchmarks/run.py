@@ -29,6 +29,8 @@ _HEADLINES = {
                         lambda d: max(d.get("sustained_load", {})
                                       .get("shared_pim", {}).values(),
                                       default=None)),
+    "BENCH_obs": ("events_per_sec",
+                  lambda d: d.get("events_per_sec")),
     "BENCH_passes": ("max_sp_gain_from_passes",
                      lambda d: max((c["shared_pim_gain"]
                                     for c in d.get("cells", [])

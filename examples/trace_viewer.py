@@ -1,0 +1,20 @@
+"""Record the paper's timeline argument as Perfetto-loadable traces.
+
+The headline numbers say Shared-PIM beats LISA; the *traces* show why.
+This example records a tiled matmul and an MoE decode step under both
+interconnects and dumps each schedule as Chrome trace-event JSON — one
+track per bank PE, BK-bus, tx/rx shared row, and bus.  Load a Shared-PIM
+trace next to its LISA twin at https://ui.perfetto.dev: the LISA PE
+tracks gap for every inter-bank span (circuit switching blocks the source
+and destination banks end to end), the Shared-PIM tracks keep computing
+while the rows drain/transit/fill through the shared-row tracks.
+
+Equivalent CLI: ``PYTHONPATH=src python -m repro.obs``.
+
+Run: ``PYTHONPATH=src python examples/trace_viewer.py``
+"""
+
+from repro.obs.viewer import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

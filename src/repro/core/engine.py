@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from typing import Sequence
 
 import numpy as np
@@ -191,6 +192,20 @@ class ResourceModel:
         """
         raise NotImplementedError
 
+    def token_names(self) -> tuple[str, ...]:
+        """Human-readable name per resource token (trace track labels).
+
+        The observability layer (:mod:`repro.obs`) renders one trace track
+        per token; the default generic names work for any model, concrete
+        models override with their real layout (PE / bus / shared-row).
+        """
+        return tuple(f"token{r}" for r in range(self.n_resources()))
+
+    def refresh_unit_names(self) -> tuple[str, ...]:
+        """Name per refresh unit (one trace track each, same order)."""
+        return tuple(f"refresh/unit{u}"
+                     for u in range(len(self.refresh_units())))
+
 
 class BankModel(ResourceModel):
     """One DRAM bank: ``n_pes`` subarray PEs plus the intra-bank interconnect.
@@ -220,6 +235,15 @@ class BankModel(ResourceModel):
         # one bank: every PE, the BK-bus and all shared-row tokens sit in
         # the refreshing array, so a refresh claims the whole block
         return (tuple(range(3 * self.n_pes + 1)),)
+
+    def token_names(self) -> tuple[str, ...]:
+        n = self.n_pes
+        return (tuple(f"pe{p}" for p in range(n)) + ("bk-bus",)
+                + tuple(f"tx{p}" for p in range(n))
+                + tuple(f"rx{p}" for p in range(n)))
+
+    def refresh_unit_names(self) -> tuple[str, ...]:
+        return ("refresh/bank0",)
 
     def compile(self, g: TaskGraph) -> Compiled:
         n_pes = self.n_pes
@@ -393,6 +417,8 @@ class EngineStats:
     #: unit) claimed for duration_ns; divide by n_banks * makespan for the
     #: per-bank refresh duty cycle
     refresh_ns: float = 0.0
+    #: applied refresh windows (refresh_ns / duration_ns, counted exactly)
+    n_refresh_windows: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -442,10 +468,20 @@ class EngineSession:
 
     def __init__(self, model: ResourceModel, *,
                  refresh: RefreshSpec | None = None,
-                 validate: bool = True):
+                 validate: bool = True,
+                 recorder=None, profile=None):
         self.model = model
         self.refresh = refresh
         self._validate = validate
+        # opt-in observability (repro.obs): a recorder captures the
+        # schedule as raw event tuples, a profile wall-clocks the loop.
+        # Both are observational only — no scheduled float changes whether
+        # they are attached or not (benchmarks/obs.py asserts recorded ==
+        # unrecorded bit-for-bit, and the goldens pin the off path).
+        self.recorder = recorder
+        self.profile = profile
+        if recorder is not None:
+            recorder.attach(self)
         self.free = [0.0] * model.n_resources()
         self.now = 0.0
         self._heap: list = []
@@ -471,6 +507,7 @@ class EngineSession:
         self._op_busy = self._move_busy = self._stall = self._energy = 0.0
         self._bus_busy = {"bank_group": 0.0, "channel": 0.0}
         self._refresh_ns = 0.0
+        self._n_refresh = 0
         # integer statistics (order independent, summed at admit time)
         self._n_ops = self._n_moves = self._n_rows = self._n_cross = 0
         self._rows_by_route: dict = {}
@@ -570,6 +607,11 @@ class EngineSession:
         for i in sources:
             gi = base + i
             heappush(heap, (neg_cp[gi], at, guids[gi], gi))
+        if self.recorder is not None:
+            from repro.obs.trace import graph_fingerprint
+            self.recorder._admits.append((job, at, n, graph_fingerprint(g)))
+            if n == 0:
+                self.recorder._jobdone.append((job, at))
         return job
 
     # --- the event loop ---------------------------------------------------------
@@ -606,9 +648,24 @@ class EngineSession:
         energy = self._energy
         bus_busy = self._bus_busy
         refresh_ns = self._refresh_ns
+        n_refresh = self._n_refresh
         completed = self._completed_backlog
         self._completed_backlog = []
         n_exec = 0
+
+        # opt-in observability: one shared branch per executed task; with
+        # neither a recorder nor a profile attached the loop below touches
+        # none of this (and no scheduled float changes either way)
+        rec = self.recorder
+        prof = self.profile
+        observe = rec is not None or prof is not None
+        rec_tasks = rec._tasks if rec is not None else None
+        rec_segs = rec._segs if rec is not None else None
+        probes = 0
+        if prof is not None:
+            _wall0 = time.perf_counter()
+            _heap0 = len(heap)
+            _refresh0 = n_refresh
 
         heappush, heappop = heapq.heappush, heapq.heappop
         while heap:
@@ -634,6 +691,9 @@ class EngineSession:
                     for r in toks:
                         free[r] = e
                     refresh_ns += rdur
+                    n_refresh += 1
+                    if rec is not None:
+                        rec._refresh.append((u, s, e))
                     heappush(rq, (due + rint, u, toks))
             p = exec_plan[i]
             lp = len(p)
@@ -644,6 +704,10 @@ class EngineSession:
                 end = start + du
                 free[rid] = end
                 op_busy += du
+                if observe:
+                    probes += 1
+                    if rec_tasks is not None:
+                        rec_tasks.append((i, start, end))
             elif lp == 3:
                 # single-segment intra-bank move (common case, pre-flattened)
                 rids, stall_counts, du = p
@@ -663,9 +727,13 @@ class EngineSession:
                             sub += span
                         stall += sub
                 move_busy += du
+                if observe:
+                    probes += len(rids)
+                    if rec_tasks is not None:
+                        rec_tasks.append((i, s, end))
             else:
                 end = dep_t
-                for seg in p[0]:
+                for _sk, seg in enumerate(p[0]):
                     if seg[0] == CIRCUIT:
                         _, rids, stall_counts, du, busy_keys, ej = seg
                         s = dep_t
@@ -688,6 +756,10 @@ class EngineSession:
                             for k in busy_keys:
                                 bus_busy[k] += span
                         move_busy += du
+                        if observe:
+                            probes += len(rids)
+                            if rec_segs is not None:
+                                rec_segs.append((i, _sk, -1, s, e))
                     else:
                         (_, leg1, leg2, leg3, drain, transit, fill, drain1,
                          transit1, fill1, mb, busy_keys, ej) = seg
@@ -721,6 +793,12 @@ class EngineSession:
                         for r in leg3:
                             free[r] = e
                         move_busy += mb
+                        if observe:
+                            probes += len(leg1) + len(leg2) + len(leg3)
+                            if rec_segs is not None:
+                                rec_segs.append((i, _sk, 0, s1, e1))
+                                rec_segs.append((i, _sk, 1, s2, e2))
+                                rec_segs.append((i, _sk, 2, s3, e))
                     if ej:
                         energy += ej
                     if e > end:
@@ -741,6 +819,8 @@ class EngineSession:
             job_rem[j] = rem
             if not rem:
                 completed.append(j)
+                if rec is not None:
+                    rec._jobdone.append((j, job_fin[j]))
             n_exec += 1
 
         self._n_live -= n_exec
@@ -752,6 +832,16 @@ class EngineSession:
         self._stall = stall
         self._energy = energy
         self._refresh_ns = refresh_ns
+        self._n_refresh = n_refresh
+        if prof is not None:
+            # pops == executed tasks (horizon/completion breaks only peek);
+            # pushes fall out of the heap-size delta, so the hot loop
+            # carries no push counter
+            prof.record_advance(
+                wall_s=time.perf_counter() - _wall0, n_exec=n_exec,
+                heap_pushes=len(heap) - _heap0 + n_exec,
+                token_probes=probes,
+                refresh_windows=n_refresh - _refresh0)
         if until is None:
             mx = max(finish) if finish else 0.0
             if mx > self.now:
@@ -773,7 +863,8 @@ class EngineSession:
             energy_j=self._energy, rows_by_route=self._rows_by_route,
             bus_busy_ns=self._bus_busy,
             finish_times=dict(zip(self._guids, finish)),
-            refresh_ns=self._refresh_ns)
+            refresh_ns=self._refresh_ns,
+            n_refresh_windows=self._n_refresh)
 
 
 def run(g: TaskGraph, model: ResourceModel, *,

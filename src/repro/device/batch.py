@@ -70,16 +70,25 @@ class SweepConfig:
 
 
 class BatchRunner:
-    """Schedules N (graph x geometry x interconnect x policy) configs."""
+    """Schedules N (graph x geometry x interconnect x policy) configs.
 
-    def __init__(self) -> None:
+    An optional :class:`~repro.obs.metrics.MetricsRegistry` aggregates the
+    whole grid as it runs — cells scheduled, per-interconnect makespan
+    distributions, resource-model cache misses — so a sweep driver gets its
+    grid-level numbers from the same registry a serving run populates.
+    """
+
+    def __init__(self, metrics=None) -> None:
         self._models: dict = {}
+        self.metrics = metrics
 
     def _model(self, mode: Interconnect, geom: DeviceGeometry) -> DeviceModel:
         key = (mode, geom)
         m = self._models.get(key)
         if m is None:
             m = self._models[key] = DeviceModel(mode, geom)
+            if self.metrics is not None:
+                self.metrics.counter("model_cache_misses").inc()
         return m
 
     def run_one(self, cfg: SweepConfig) -> DeviceScheduleResult:
@@ -95,8 +104,13 @@ class BatchRunner:
                                              policy=cfg.policy,
                                              scaling=cfg.scaling,
                                              **cfg.kwargs)
-        return dev_sched.schedule(g, cfg.mode, cfg.geometry,
-                                  model=self._model(cfg.mode, cfg.geometry))
+        r = dev_sched.schedule(g, cfg.mode, cfg.geometry,
+                               model=self._model(cfg.mode, cfg.geometry))
+        if self.metrics is not None:
+            self.metrics.counter("cells_scheduled").inc()
+            self.metrics.histogram(
+                f"makespan_ns/{cfg.mode.value}").observe(r.makespan_ns)
+        return r
 
     def run(self, configs: Iterable[SweepConfig],
             callback: Callable[[SweepConfig, DeviceScheduleResult], None]

@@ -89,6 +89,23 @@ class DeviceModel(engine.ResourceModel):
         return tuple(tuple(range(b * stride, (b + 1) * stride))
                      for b in range(self.geom.n_banks))
 
+    def token_names(self) -> tuple[str, ...]:
+        """Trace track label per token, mirroring the layout above."""
+        geom = self.geom
+        n = geom.pes_per_bank
+        names: list[str] = []
+        for b in range(geom.n_banks):
+            names.extend(f"bank{b}/pe{p}" for p in range(n))
+            names.append(f"bank{b}/bk-bus")
+            names.extend(f"bank{b}/tx{p}" for p in range(n))
+            names.extend(f"bank{b}/rx{p}" for p in range(n))
+        names.extend(f"group-bus{g}" for g in range(geom.n_groups))
+        names.extend(f"chan-bus{c}" for c in range(geom.channels))
+        return tuple(names)
+
+    def refresh_unit_names(self) -> tuple[str, ...]:
+        return tuple(f"refresh/bank{b}" for b in range(self.geom.n_banks))
+
     def _plan(self, src_pe: int, dst_pe: int) -> xbar.CrossBankPlan:
         geom = self.geom
         key = (geom.route(geom.bank_of(src_pe), geom.bank_of(dst_pe)),

@@ -1,0 +1,39 @@
+"""Opt-in observability: schedule tracing, metrics, and self-profiling.
+
+Three small, composable pieces, all strictly opt-in (a session with none
+of them attached runs the exact pre-observability code path — the golden
+schedules stay bit-for-bit):
+
+``trace``    :class:`Recorder` — the engine appends raw claim/refresh/job
+             events while it runs; export to Chrome trace-event JSON
+             (one track per PE / bus / shared row / refresh unit, plus
+             job and lease tracks) loadable at https://ui.perfetto.dev,
+             with graph fingerprints, interconnect mode, and rewrite logs
+             as reproducible provenance
+``metrics``  :class:`MetricsRegistry` — counters / gauges / histograms
+             for the serving and batch layers (queue depth, lease
+             occupancy, latency, SLO attainment, per-resource utilization)
+``profile``  :class:`EngineProfile` — wall-clocks the event loop itself:
+             events/sec, heap ops, token free-time probes, the throughput
+             guard ``benchmarks/obs.py`` enforces
+
+Quickstart (trace one sweep cell, view at ui.perfetto.dev)::
+
+    from repro import obs
+    from repro.core.pluto import Interconnect
+    from repro.device import DeviceGeometry, SweepConfig
+
+    cfg = SweepConfig.make("mm", Interconnect.SHARED_PIM,
+                           DeviceGeometry(channels=1, banks_per_channel=4),
+                           n=24)
+    obs.record_sweep(cfg).dump("mm_sp.trace.json")
+
+``python -m repro.obs`` emits a ready-made Shared-PIM vs LISA trace pair
+(see :mod:`repro.obs.viewer`).
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, slo_attainment, utilization)
+from repro.obs.profile import AdvanceSample, EngineProfile  # noqa: F401
+from repro.obs.trace import (Recorder, graph_fingerprint,  # noqa: F401
+                             record_sweep, rewrite_log_metadata)

@@ -1,0 +1,5 @@
+"""``python -m repro.obs``: record paper workloads as Perfetto traces."""
+
+from repro.obs.viewer import main
+
+raise SystemExit(main())

@@ -1,0 +1,226 @@
+"""Counter / gauge / histogram registry + schedule-derived resource metrics.
+
+The serving and batch layers expose *what happened* as aggregates; this
+module gives them a small, dependency-free metrics vocabulary:
+
+* :class:`Counter`   — monotonic event counts (jobs arrived, cells swept);
+* :class:`Gauge`     — a timestamped series of instantaneous values
+  (queue depth, lease occupancy) that keeps its full timeline, because the
+  interesting serving phenomena — queueing collapse past saturation, lease
+  fragmentation — are *shapes*, not endpoints;
+* :class:`Histogram` — value distributions (latency, makespan) summarized
+  by count / mean / min / max / percentiles.
+
+A :class:`MetricsRegistry` names them (create-on-first-use) and snapshots
+deterministically, so whole sweep grids can aggregate one registry across
+every :class:`~repro.device.batch.BatchRunner` cell and every
+:class:`~repro.runtime.serve.ServingRuntime` run.
+
+Schedule-derived metrics live here too: :func:`utilization` folds a
+:class:`~repro.obs.trace.Recorder`'s claim events into per-resource busy
+fractions (one value per token track — the timeline the Chrome trace
+renders, reduced to numbers a guard can assert on), and
+:func:`slo_attainment` computes per-tenant SLO attainment over serving
+results.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class Counter:
+    """Monotonic count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counters only go up; got inc({n})")
+        self.value += n
+
+
+class Gauge:
+    """Timestamped series of instantaneous values (full timeline kept)."""
+
+    __slots__ = ("_series",)
+
+    def __init__(self) -> None:
+        self._series: list[tuple[float, float]] = []
+
+    def record(self, t_ns: float, value: float) -> None:
+        self._series.append((t_ns, value))
+
+    @property
+    def last(self) -> float | None:
+        return self._series[-1][1] if self._series else None
+
+    @property
+    def peak(self) -> float | None:
+        return max(v for _, v in self._series) if self._series else None
+
+    def series(self) -> list[tuple[float, float]]:
+        return list(self._series)
+
+    def time_weighted_mean(self) -> float:
+        """Mean value weighted by how long each value was held.
+
+        The series is a step function (each value holds until the next
+        timestamp); a plain mean over-weights bursts of rapid updates.
+        """
+        s = self._series
+        if len(s) < 2:
+            return float(s[0][1]) if s else 0.0
+        ts = np.asarray([t for t, _ in s], dtype=np.float64)
+        vs = np.asarray([v for _, v in s], dtype=np.float64)
+        dt = np.diff(ts)
+        span = ts[-1] - ts[0]
+        if span <= 0.0:
+            return float(vs.mean())
+        return float((vs[:-1] * dt).sum() / span)
+
+
+class Histogram:
+    """Value distribution summarized on demand (raw samples kept)."""
+
+    __slots__ = ("_values",)
+
+    def __init__(self) -> None:
+        self._values: list[float] = []
+
+    def observe(self, value: float) -> None:
+        self._values.append(value)
+
+    @property
+    def n(self) -> int:
+        return len(self._values)
+
+    def summary(self, percentiles=(50.0, 95.0, 99.0)) -> dict:
+        if not self._values:
+            return {"n": 0}
+        a = np.asarray(self._values, dtype=np.float64)
+        out = {"n": len(a), "mean": float(a.mean()),
+               "min": float(a.min()), "max": float(a.max())}
+        for p in percentiles:
+            out[f"p{p:g}"] = float(np.percentile(a, p))
+        return out
+
+
+class MetricsRegistry:
+    """Named counters/gauges/histograms, created on first use."""
+
+    def __init__(self) -> None:
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram()
+        return h
+
+    def snapshot(self) -> dict:
+        """Deterministic nested dict of everything recorded (sorted keys).
+
+        Gauges report last / peak / time-weighted mean plus the series
+        length (the full series stays on the Gauge for callers that plot).
+        """
+        return {
+            "counters": {k: c.value
+                         for k, c in sorted(self._counters.items())},
+            "gauges": {k: {"last": g.last, "peak": g.peak,
+                           "mean": g.time_weighted_mean(),
+                           "n": len(g._series)}
+                       for k, g in sorted(self._gauges.items())},
+            "histograms": {k: h.summary()
+                           for k, h in sorted(self._histograms.items())},
+        }
+
+
+# --- schedule-derived metrics ----------------------------------------------------
+
+
+def utilization(recorder, *, span_ns: float | None = None) -> dict[str, float]:
+    """Busy fraction per resource track from a recorder's claim events.
+
+    Claims on one token never overlap (the engine serializes each token's
+    free time), so per-token busy time is a plain sum of claim durations;
+    the denominator is ``span_ns`` (defaults to the last claim end, i.e.
+    the recorded makespan).  Refresh windows count as busy time on their
+    bank's refresh track, not on the PE tracks — refresh occupancy and
+    compute occupancy stay separately observable.
+    """
+    s = recorder._session
+    if s is None:
+        raise ValueError("recorder was never attached to a session")
+    model = s.model
+    names = model.token_names()
+    exec_plan = s._exec_plan
+    busy = np.zeros(len(names), dtype=np.float64)
+    t_end = 0.0
+    for pos, t0, t1 in recorder._tasks:
+        p = exec_plan[pos]
+        lp = len(p)
+        if lp == 2:
+            busy[p[0]] += t1 - t0
+        elif lp == 3:
+            for rid in p[0]:
+                busy[rid] += t1 - t0
+        if t1 > t_end:
+            t_end = t1
+    from repro.core.engine import CIRCUIT
+    for pos, k, leg, t0, t1 in recorder._segs:
+        seg = exec_plan[pos][0][k]
+        rids = seg[1] if seg[0] == CIRCUIT else seg[1 + leg]
+        for rid in rids:
+            busy[rid] += t1 - t0
+        if t1 > t_end:
+            t_end = t1
+    refresh_busy: dict[int, float] = {}
+    for unit, t0, t1 in recorder._refresh:
+        refresh_busy[unit] = refresh_busy.get(unit, 0.0) + (t1 - t0)
+        if t1 > t_end:
+            t_end = t1
+    span = span_ns if span_ns is not None else t_end
+    if span <= 0.0:
+        return {}
+    out = {name: float(busy[i] / span) for i, name in enumerate(names)}
+    runit_names = model.refresh_unit_names()
+    for unit, b in sorted(refresh_busy.items()):
+        out[runit_names[unit]] = b / span
+    return out
+
+
+def slo_attainment(results, slo_ns: float) -> dict[str, dict]:
+    """Per-tenant SLO attainment over serving :class:`JobResult` rows.
+
+    Returns ``{tenant: {"n_jobs", "attained", "attainment"}}`` where
+    ``attainment`` is the fraction of the tenant's jobs whose latency met
+    ``slo_ns``.  Deterministic ordering (sorted tenant names).
+    """
+    if slo_ns <= 0.0:
+        raise ValueError(f"slo_ns must be > 0, got {slo_ns}")
+    per: dict[str, list[float]] = {}
+    for r in results:
+        per.setdefault(r.tenant, []).append(r.latency_ns)
+    return {
+        tenant: {"n_jobs": len(ls),
+                 "attained": sum(1 for v in ls if v <= slo_ns),
+                 "attainment": sum(1 for v in ls if v <= slo_ns) / len(ls)}
+        for tenant, ls in sorted(per.items())}

@@ -1,0 +1,94 @@
+"""Simulator self-profiling: how fast is the event loop itself?
+
+The ROADMAP gates HBM-scale geometry sweeps on raw engine speed — the
+event loop must get *measurably* faster before thousand-PE devices are
+sweepable — and a speed target nobody measures is a speed target that
+silently regresses.  An :class:`EngineProfile` attached to an
+:class:`~repro.core.engine.EngineSession` wall-clocks every ``advance``
+and counts the loop's units of work:
+
+* **events/sec** — executed tasks per wall-second, the engine-throughput
+  headline ``benchmarks/obs.py`` records and guards with a floor;
+* **heap operations** — ready-queue pushes and pops per advance (pops
+  equal executed tasks; pushes are derived from the heap-size delta, so
+  the hot loop carries no push counter);
+* **claim-segment free-time probes** — how many token free-time slots the
+  loop read while placing claims, the quantity the ROADMAP's
+  vectorize-the-hot-path item needs a baseline for;
+* **refresh windows** applied while advancing.
+
+Profiling shares the engine's single observation branch with the trace
+recorder: with neither attached the loop does no bookkeeping at all, and
+with profiling attached no *scheduled* float changes — the profile reads
+wall clocks, never virtual time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AdvanceSample:
+    """One profiled ``advance`` call."""
+
+    wall_s: float
+    n_exec: int              # tasks executed (== heap pops)
+    heap_pushes: int
+    token_probes: int        # token free-time reads while placing claims
+    refresh_windows: int
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.n_exec / self.wall_s if self.wall_s > 0.0 else 0.0
+
+
+class EngineProfile:
+    """Accumulates per-advance samples for one session (see module doc)."""
+
+    def __init__(self) -> None:
+        self.samples: list[AdvanceSample] = []
+
+    def add(self, sample: AdvanceSample) -> None:
+        self.samples.append(sample)
+
+    def record_advance(self, *, wall_s: float, n_exec: int, heap_pushes: int,
+                       token_probes: int, refresh_windows: int) -> None:
+        """Engine-facing hook: one sample per ``advance`` call."""
+        self.samples.append(AdvanceSample(wall_s, n_exec, heap_pushes,
+                                          token_probes, refresh_windows))
+
+    # --- aggregates -------------------------------------------------------------
+
+    @property
+    def n_advances(self) -> int:
+        return len(self.samples)
+
+    @property
+    def wall_s(self) -> float:
+        return sum(s.wall_s for s in self.samples)
+
+    @property
+    def n_exec(self) -> int:
+        return sum(s.n_exec for s in self.samples)
+
+    @property
+    def events_per_sec(self) -> float:
+        w = self.wall_s
+        return self.n_exec / w if w > 0.0 else 0.0
+
+    def summary(self) -> dict:
+        """Deterministic-keyed aggregate (ready for a BENCH artifact)."""
+        n = self.n_exec
+        return {
+            "n_advances": self.n_advances,
+            "n_exec": n,
+            "wall_s": self.wall_s,
+            "events_per_sec": self.events_per_sec,
+            "heap_pushes": sum(s.heap_pushes for s in self.samples),
+            "heap_pops": n,
+            "token_probes": sum(s.token_probes for s in self.samples),
+            "token_probes_per_task": (
+                sum(s.token_probes for s in self.samples) / n if n else 0.0),
+            "refresh_windows": sum(s.refresh_windows for s in self.samples),
+        }

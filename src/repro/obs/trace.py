@@ -1,0 +1,290 @@
+"""Schedule tracing: an opt-in event recorder + Chrome-trace export.
+
+The paper's claims are *timeline* claims — Shared-PIM keeps computing while
+rows are in flight, LISA stalls its spans — yet every result type in this
+repo is an end-of-run aggregate.  A :class:`Recorder` attached to an
+:class:`~repro.core.engine.EngineSession` captures the schedule as it
+executes — task dispatch/finish, per-token claim-segment occupancy,
+refresh windows, job admit/complete — and the serving layer adds lease
+grant/release, arrivals, and queue depth on top.  :meth:`Recorder.dump`
+exports the whole thing as Chrome trace-event JSON (loadable at
+https://ui.perfetto.dev) with **one track per resource token** — every
+bank PE, BK-bus, tx/rx shared row, group bus, and channel bus of the
+model's token layout — plus per-bank refresh tracks and per-job /
+per-tenant serving tracks.
+
+Recording is strictly opt-in and strictly *observational*: the engine's
+event loop appends raw ``(task, start, end)`` tuples while it runs and the
+recorder expands them into trace events only at export time, reading the
+claimed tokens back out of the session's compiled plan.  No float the
+scheduler computes is touched, so a recorded schedule is bit-for-bit the
+unrecorded one (``benchmarks/obs.py`` asserts this, and bounds the
+wall-clock overhead of recording).
+
+Exported traces are reproducible provenance, not just pictures: the
+metadata block carries each admitted graph's :func:`graph_fingerprint`,
+the interconnect mode, and (when the caller provides one) the pass
+pipeline's rewrite log.  Export is byte-deterministic — stable event
+ordering, stable float formatting — so two recordings of the same
+configuration diff clean (``tests/test_obs.py`` pins this).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+#: fields hashed into a graph fingerprint, in layout order
+_FINGERPRINT_FIELDS = ("uids", "kinds", "dep_indptr", "dep_pos", "duration",
+                       "op_class", "pe", "src", "dst_indptr", "dst_flat",
+                       "rows")
+
+
+def graph_fingerprint(g) -> str:
+    """Short stable digest of a TaskGraph's arrays (trace provenance key).
+
+    Two graphs with identical structure, placement, durations, and row
+    counts fingerprint identically; any rewrite — a dropped move, a new
+    placement, a different materialization — changes it.
+    """
+    h = hashlib.sha256()
+    for f in _FINGERPRINT_FIELDS:
+        a = getattr(g, f)
+        h.update(f.encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+class Recorder:
+    """Opt-in schedule recorder (see module docstring).
+
+    Pass one to :class:`~repro.core.engine.EngineSession` (or to
+    :class:`~repro.runtime.serve.ServingRuntime`, which forwards it).  The
+    engine appends raw tuples to the ``_tasks`` / ``_segs`` / ``_refresh``
+    / ``_jobdone`` stores; the serving runtime appends to the serving-event
+    stores.  All expansion work happens in :meth:`chrome_trace`.
+    """
+
+    def __init__(self) -> None:
+        self._session = None
+        # engine-driven stores (appended inside the hot loop: keep raw)
+        self._tasks: list = []       # (pos, start_ns, end_ns)
+        self._segs: list = []        # (pos, seg_idx, leg, start_ns, end_ns)
+        self._refresh: list = []     # (unit, start_ns, end_ns)
+        self._admits: list = []      # (job, at_ns, n_tasks, fingerprint)
+        self._jobdone: list = []     # (job, finish_ns)
+        # serving-driven stores (appended between advances: cold path)
+        self._arrivals: list = []    # (t_ns, tenant, seq)
+        self._leases: list = []      # (ticket, banks, t0_ns, t1_ns|None, who)
+        self._lease_open: dict = {}  # ticket -> index into _leases
+        self._queue_depth: list = [] # (t_ns, depth)
+
+    # --- attachment -------------------------------------------------------------
+
+    def attach(self, session) -> None:
+        """Bind to the session whose schedule this recorder captures."""
+        if self._session is not None and self._session is not session:
+            raise ValueError(
+                "Recorder is already attached to another EngineSession; "
+                "use one recorder per session")
+        self._session = session
+
+    @property
+    def n_events(self) -> int:
+        return (len(self._tasks) + len(self._segs) + len(self._refresh)
+                + len(self._arrivals) + len(self._queue_depth)
+                + sum(1 for le in self._leases if le[3] is not None))
+
+    # --- serving-side hooks (cold path, called between advances) ---------------
+
+    def arrival(self, t_ns: float, tenant: str, seq: int) -> None:
+        self._arrivals.append((t_ns, tenant, seq))
+
+    def lease_grant(self, ticket: int, banks: tuple, t_ns: float,
+                    who: str) -> None:
+        self._lease_open[ticket] = len(self._leases)
+        self._leases.append([ticket, tuple(banks), t_ns, None, who])
+
+    def lease_release(self, ticket: int, t_ns: float) -> None:
+        idx = self._lease_open.pop(ticket, None)
+        if idx is not None:
+            self._leases[idx][3] = t_ns
+
+    def queue_depth(self, t_ns: float, depth: int) -> None:
+        self._queue_depth.append((t_ns, depth))
+
+    # --- export -----------------------------------------------------------------
+
+    def chrome_trace(self, metadata: dict | None = None) -> dict:
+        """Expand the recorded schedule into a Chrome trace-event dict.
+
+        Layout: pid 0 = engine resource tokens (one tid per token, named
+        from the model's ``token_names``; refresh units follow on their own
+        tids), pid 1 = jobs (one tid per admitted job), pid 2 = serving
+        (arrivals, queue-depth counter, one lease track per bank).
+        """
+        s = self._session
+        if s is None:
+            raise ValueError("recorder was never attached to a session")
+        model = s.model
+        names = model.token_names()
+        n_res = len(names)
+        exec_plan = s._exec_plan
+        guids = s._guids
+        job_of = s._job_of
+        ev: list[dict] = []
+
+        def span(pid, tid, name, t0, t1, **args):
+            ev.append({"ph": "X", "pid": pid, "tid": tid, "name": name,
+                       "ts": t0 / 1e3, "dur": (t1 - t0) / 1e3,
+                       "args": args} if args else
+                      {"ph": "X", "pid": pid, "tid": tid, "name": name,
+                       "ts": t0 / 1e3, "dur": (t1 - t0) / 1e3})
+
+        # engine tracks: expand each executed task's claims onto its tokens
+        for pos, t0, t1 in self._tasks:
+            p = exec_plan[pos]
+            lp = len(p)
+            uid, job = guids[pos], job_of[pos]
+            if lp == 2:
+                span(0, p[0], f"op u{uid}", t0, t1, job=job)
+            elif lp == 3:
+                for rid in p[0]:
+                    span(0, rid, f"move u{uid}", t0, t1, job=job)
+            # lp == 1 (multi-segment): claims recorded per segment below
+        from repro.core.engine import CIRCUIT
+        for pos, k, leg, t0, t1 in self._segs:
+            seg = exec_plan[pos][0][k]
+            uid, job = guids[pos], job_of[pos]
+            if seg[0] == CIRCUIT:
+                rids, label = seg[1], f"move u{uid}"
+            else:
+                rids = seg[1 + leg]
+                label = f"move u{uid}/{('drain', 'transit', 'fill')[leg]}"
+            for rid in rids:
+                span(0, rid, label, t0, t1, job=job)
+        runit_names = model.refresh_unit_names()
+        for unit, t0, t1 in self._refresh:
+            span(0, n_res + unit, "refresh", t0, t1)
+
+        # job tracks: admit instants + admit->finish spans
+        fins = dict(self._jobdone)
+        for job, at, n_tasks, fp in self._admits:
+            ev.append({"ph": "i", "pid": 1, "tid": job, "name": "admit",
+                       "ts": at / 1e3, "s": "t",
+                       "args": {"n_tasks": n_tasks, "fingerprint": fp}})
+            fin = fins.get(job)
+            if fin is not None:
+                span(1, job, f"job {job}", at, fin, n_tasks=n_tasks)
+
+        # serving tracks
+        for t, tenant, seq in self._arrivals:
+            ev.append({"ph": "i", "pid": 2, "tid": 0,
+                       "name": f"arrive {tenant}#{seq}", "ts": t / 1e3,
+                       "s": "t"})
+        for t, depth in self._queue_depth:
+            ev.append({"ph": "C", "pid": 2, "tid": 1, "name": "queue_depth",
+                       "ts": t / 1e3, "args": {"depth": depth}})
+        lease_banks = sorted({b for le in self._leases for b in le[1]})
+        lease_tid = {b: 2 + i for i, b in enumerate(lease_banks)}
+        for ticket, banks, t0, t1, who in self._leases:
+            if t1 is None:
+                continue          # lease still open at export: no span yet
+            for b in banks:
+                span(2, lease_tid[b], f"lease {who}", t0, t1, ticket=ticket)
+
+        # canonical ordering: raw stores are appended in execution order,
+        # which is deterministic, but sort anyway so the byte layout never
+        # depends on which store an event came from
+        ev.sort(key=lambda e: (e["ts"], e["pid"], e["tid"], e["name"],
+                               e.get("dur", 0.0)))
+
+        # track-name metadata (after the sort: metadata leads the file)
+        meta_ev: list[dict] = []
+        for pid, pname in ((0, "engine"), (1, "jobs"), (2, "serving")):
+            meta_ev.append({"ph": "M", "pid": pid, "name": "process_name",
+                            "args": {"name": pname}})
+        for tid, name in enumerate(names):
+            meta_ev.append({"ph": "M", "pid": 0, "tid": tid,
+                            "name": "thread_name", "args": {"name": name}})
+        for unit, name in enumerate(runit_names):
+            meta_ev.append({"ph": "M", "pid": 0, "tid": n_res + unit,
+                            "name": "thread_name", "args": {"name": name}})
+        for job, _at, _n, _fp in self._admits:
+            meta_ev.append({"ph": "M", "pid": 1, "tid": job,
+                            "name": "thread_name",
+                            "args": {"name": f"job{job}"}})
+        meta_ev.append({"ph": "M", "pid": 2, "tid": 0, "name": "thread_name",
+                        "args": {"name": "arrivals"}})
+        meta_ev.append({"ph": "M", "pid": 2, "tid": 1, "name": "thread_name",
+                        "args": {"name": "queue"}})
+        for b in lease_banks:
+            meta_ev.append({"ph": "M", "pid": 2, "tid": lease_tid[b],
+                            "name": "thread_name",
+                            "args": {"name": f"lease/bank{b}"}})
+
+        other = {
+            "interconnect": model.mode.value,
+            "jobs": [{"job": job, "admit_ns": at, "n_tasks": n,
+                      "graph_fingerprint": fp}
+                     for job, at, n, fp in self._admits],
+        }
+        if metadata:
+            other.update(metadata)
+        return {"traceEvents": meta_ev + ev, "displayTimeUnit": "ns",
+                "otherData": other}
+
+    def dump(self, path: str | Path, metadata: dict | None = None) -> Path:
+        """Write the Chrome trace as byte-deterministic JSON; returns path.
+
+        ``sort_keys`` plus compact separators plus Python's canonical float
+        ``repr`` make the bytes a pure function of the recorded schedule —
+        traces of the same configuration diff clean across runs and PRs.
+        """
+        path = Path(path)
+        blob = json.dumps(self.chrome_trace(metadata), sort_keys=True,
+                          separators=(",", ":"))
+        path.write_text(blob)
+        return path
+
+
+def rewrite_log_metadata(logs: dict) -> dict:
+    """Serialize ``{key: RewriteLog}`` into trace-metadata provenance."""
+    out = {}
+    for key, log in sorted(logs.items(), key=lambda kv: str(kv[0])):
+        out[str(key)] = {"summary": log.summary(),
+                         "rewrites": [str(e) for e in log.entries]}
+    return {"rewrite_logs": out}
+
+
+def record_sweep(cfg, *, refresh=None) -> Recorder:
+    """Record one :class:`~repro.device.batch.SweepConfig` cell's schedule.
+
+    Builds the cell's placed (and optionally optimized) graph exactly the
+    way :class:`~repro.device.batch.BatchRunner` would, runs it through a
+    fresh recorded :class:`~repro.core.engine.EngineSession`, and returns
+    the recorder (dump with cell metadata already attached via
+    :meth:`Recorder.dump`).  Deterministic: two calls with the same config
+    produce byte-identical trace JSON.
+    """
+    from repro.core import ir
+    from repro.core.engine import EngineSession
+    from repro.device import partition
+    from repro.device.resources import DeviceModel
+
+    if cfg.opt:
+        struct = partition.optimized_struct(
+            cfg.app, cfg.geometry, policy=cfg.policy, scaling=cfg.scaling,
+            opt=cfg.opt, **cfg.kwargs)
+    else:
+        struct = partition.partitioned_struct(
+            cfg.app, cfg.geometry, policy=cfg.policy, scaling=cfg.scaling,
+            **cfg.kwargs)
+    g = ir.materialize(struct, cfg.mode)
+    rec = Recorder()
+    session = EngineSession(DeviceModel(cfg.mode, cfg.geometry),
+                            refresh=refresh, recorder=rec)
+    session.admit(g)
+    session.advance()
+    return rec

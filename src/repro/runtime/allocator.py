@@ -72,6 +72,23 @@ class BankAllocator:
     def n_queued(self) -> int:
         return len(self._queue)
 
+    @property
+    def n_banks_leased(self) -> int:
+        """Banks currently held by outstanding leases."""
+        return self.geom.n_banks - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the device's banks currently leased (0..1) — the
+        lease-occupancy series the serving metrics sample over time."""
+        return self.n_banks_leased / self.geom.n_banks
+
+    @property
+    def queued_bank_demand(self) -> int:
+        """Banks the queued jobs are waiting for, summed (queue pressure
+        in the same unit as capacity, unlike a bare job count)."""
+        return sum(banks for _key, banks, _payload in self._queue)
+
     def free_banks(self) -> tuple[int, ...]:
         return tuple(sorted(self._free))
 

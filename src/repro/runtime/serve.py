@@ -79,14 +79,24 @@ class ServingRuntime:
                  placement: str = "locality_first",
                  opt: tuple[str, ...] = (),
                  refresh: RefreshSpec | None = None,
-                 model: DeviceModel | None = None):
+                 model: DeviceModel | None = None,
+                 recorder=None, metrics=None):
         if model is None:
             model = DeviceModel(mode, geom)
         self.mode = mode
         self.geom = geom
         self.placement = placement
         self.opt = tuple(opt)
-        self.session = EngineSession(model, refresh=refresh)
+        # opt-in observability (repro.obs): the recorder is forwarded into
+        # the engine session (schedule tracing) and additionally captures
+        # the serving events the engine cannot see — arrivals, lease
+        # grant/release, queue depth; the metrics registry accumulates
+        # queue-depth / lease-occupancy series and latency histograms.
+        # With neither attached the serving path is unchanged.
+        self.recorder = recorder
+        self.metrics = metrics
+        self.session = EngineSession(model, refresh=refresh,
+                                     recorder=recorder)
         self.allocator = BankAllocator(geom, admission)
         self.results: list[JobResult] = []
         self.rewrite_logs: dict = {}  # (app, kw, banks) -> RewriteLog
@@ -155,16 +165,22 @@ class ServingRuntime:
                     rec = self.session.job(jid)
                     while pending and pending[0][0] <= rec.finish_ns:
                         self._submit(heapq.heappop(pending)[3])
-                    self.results.append(JobResult(
+                    result = JobResult(
                         req.tenant.name, req.tenant.app, req.seq,
                         req.arrival_ns, rec.admit_ns, rec.finish_ns,
-                        lease.banks, rec.n_tasks))
+                        lease.banks, rec.n_tasks)
+                    self.results.append(result)
                     if closed is not None:
                         nxt = closed.on_complete(req, rec.finish_ns)
                         if nxt is not None:
                             heapq.heappush(pending, (*nxt.sort_key, nxt))
+                    if self.recorder is not None:
+                        self.recorder.lease_release(lease.ticket,
+                                                    rec.finish_ns)
                     for granted in self.allocator.release(lease):
                         self._start(granted, now=rec.finish_ns)
+                    if self.metrics is not None:
+                        self._observe_completion(result, rec.finish_ns)
                 continue
             if until is None:
                 if self.allocator.n_queued:
@@ -179,10 +195,15 @@ class ServingRuntime:
         return self.results[first:]
 
     def _submit(self, req: JobRequest) -> None:
+        if self.recorder is not None:
+            self.recorder.arrival(req.arrival_ns, req.tenant.name, req.seq)
         for granted in self.allocator.request(
                 req.tenant.banks, priority=req.tenant.priority,
                 cost=self.job_cost(req), payload=req):
             self._start(granted, now=req.arrival_ns)
+        if self.metrics is not None:
+            self.metrics.counter("jobs_arrived").inc()
+            self._observe_occupancy(req.arrival_ns)
 
     def _start(self, lease: Lease, now: float) -> None:
         req: JobRequest = lease.payload
@@ -190,12 +211,56 @@ class ServingRuntime:
         g = self._graph(req, lease.banks)
         jid = self.session.admit(g, at=at)
         self._live[jid] = (req, lease, at)
+        if self.recorder is not None:
+            self.recorder.lease_grant(lease.ticket, lease.banks, at,
+                                      req.tenant.name)
+
+    # --- observability ----------------------------------------------------------
+
+    def _observe_occupancy(self, t_ns: float) -> None:
+        """Queue-depth and lease-occupancy series points at ``t_ns``."""
+        m = self.metrics
+        m.gauge("queue_depth").record(t_ns, self.allocator.n_queued)
+        m.gauge("lease_occupancy").record(t_ns, self.allocator.occupancy)
+
+    def _observe_completion(self, result: JobResult, t_ns: float) -> None:
+        m = self.metrics
+        m.counter("jobs_completed").inc()
+        m.histogram("latency_ns").observe(result.latency_ns)
+        m.histogram("queue_ns").observe(result.queue_ns)
+        m.histogram(f"latency_ns/{result.tenant}").observe(result.latency_ns)
+        self._observe_occupancy(t_ns)
+
+    def export_trace(self, path, metadata: dict | None = None):
+        """Dump the recorded schedule as Chrome trace JSON (returns path).
+
+        The metadata block carries the runtime's full provenance — mode,
+        geometry, admission/placement/opt configuration, and every job
+        graph's rewrite log — so the trace is reproducible, not just a
+        picture.  Requires the runtime to have been built with a recorder.
+        """
+        if self.recorder is None:
+            raise ValueError(
+                "ServingRuntime has no recorder; construct it with "
+                "ServingRuntime(..., recorder=obs.Recorder())")
+        from repro.obs.trace import rewrite_log_metadata
+        meta = {
+            "geometry": self.geom.describe(),
+            "admission": self.allocator.policy,
+            "placement": self.placement,
+            "opt": list(self.opt),
+        }
+        meta.update(rewrite_log_metadata(self.rewrite_logs))
+        if metadata:
+            meta.update(metadata)
+        return self.recorder.dump(path, meta)
 
 
 # --- latency / throughput summaries ---------------------------------------------
 
 
-def summarize(results, *, percentiles=(50.0, 95.0, 99.0)) -> dict:
+def summarize(results, *, percentiles=(50.0, 95.0, 99.0),
+              min_samples: int = 2) -> dict:
     """Throughput and latency percentiles over a batch of job results.
 
     ``makespan_ns`` is the first-arrival → last-finish *span* — the same
@@ -203,11 +268,21 @@ def summarize(results, *, percentiles=(50.0, 95.0, 99.0)) -> dict:
     absolute last finish time, which only coincides with the span when the
     batch arrives at t=0.)  The absolute window endpoints are exposed
     separately as ``t_start_ns`` / ``t_end_ns``.
+
+    Per-tenant rows carry ``n_jobs`` and ``mean_ns`` alongside ``p99_ns``,
+    plus ``p99_reliable``: a percentile over fewer than ``min_samples``
+    observations is just that job's latency wearing a p99 costume, so sweep
+    guards keying off per-tenant tails must check the flag (or the sample
+    count) before trusting the number.  The threshold is echoed top-level
+    as ``percentile_min_samples``.
     """
+    if min_samples < 1:
+        raise ValueError(f"min_samples must be >= 1, got {min_samples}")
     if not results:
         return {"n_jobs": 0, "throughput_jps": 0.0, "latency_ns": {},
                 "mean_queue_ns": 0.0, "makespan_ns": 0.0,
-                "t_start_ns": 0.0, "t_end_ns": 0.0, "per_tenant": {}}
+                "t_start_ns": 0.0, "t_end_ns": 0.0,
+                "percentile_min_samples": min_samples, "per_tenant": {}}
     lat = np.asarray([r.latency_ns for r in results], dtype=np.float64)
     queue = np.asarray([r.queue_ns for r in results], dtype=np.float64)
     t0 = min(r.arrival_ns for r in results)
@@ -226,8 +301,11 @@ def summarize(results, *, percentiles=(50.0, 95.0, 99.0)) -> dict:
         "makespan_ns": span,
         "t_start_ns": t0,
         "t_end_ns": t1,
+        "percentile_min_samples": min_samples,
         "per_tenant": {
             name: {"n_jobs": len(ls),
-                   "p99_ns": float(np.percentile(np.asarray(ls), 99.0))}
+                   "mean_ns": float(np.mean(ls)),
+                   "p99_ns": float(np.percentile(np.asarray(ls), 99.0)),
+                   "p99_reliable": len(ls) >= min_samples}
             for name, ls in sorted(per_tenant.items())},
     }

@@ -276,3 +276,82 @@ class TestUidRelabelInvariance:
         s.admit(g)
         s.advance()
         assert s.stats() == want
+
+
+class TestStatsInvariants:
+    """Physical-accounting invariants of EngineStats under refresh.
+
+    No float in the stats block is golden-pinned on these synthetic
+    sessions, so these are the checks that catch an accounting bug the
+    goldens cannot: busy time exceeding device capacity, refresh windows
+    that do not add up to refresh nanoseconds, or a mid-flight admission
+    perturbing an already-scheduled job's finish times.
+    """
+
+    REFRESH = RefreshSpec(interval_ns=2000.0, duration_ns=200.0)
+
+    def _device_stats(self, mode, refresh=None):
+        g = build_partitioned_ir("pmm", mode, GEOM, n=20)
+        s = EngineSession(DeviceModel(mode, GEOM), refresh=refresh)
+        s.admit(g)
+        s.advance()
+        return s.stats(), s
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_busy_time_within_device_capacity(self, mode):
+        stats, s = self._device_stats(mode, refresh=self.REFRESH)
+        for f in ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns",
+                  "energy_j", "refresh_ns"):
+            assert getattr(stats, f) >= 0.0, f
+        capacity = stats.makespan_ns * s.model.n_resources()
+        assert stats.op_busy_ns + stats.move_busy_ns <= capacity
+        assert stats.op_busy_ns + stats.move_busy_ns > 0.0
+        # per-resource occupancy can never exceed the busiest possible
+        # single timeline
+        assert stats.op_busy_ns <= stats.makespan_ns * s.model.n_resources()
+        for bus, busy in stats.bus_busy_ns.items():
+            assert 0.0 <= busy <= capacity, bus
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_refresh_windows_account_exactly(self, mode):
+        stats, s = self._device_stats(mode, refresh=self.REFRESH)
+        # each applied window claims one unit for exactly duration_ns
+        assert stats.n_refresh_windows > 0
+        assert stats.refresh_ns == pytest.approx(
+            stats.n_refresh_windows * self.REFRESH.duration_ns)
+        # duty cycle: windows fire once per interval per unit while the
+        # frontier advances; allow slack for edge windows (a refresh due
+        # near the makespan may or may not fire, and a busy bank defers)
+        n_units = len(s.model.refresh_units())
+        nominal = n_units * stats.makespan_ns / self.REFRESH.interval_ns
+        assert 0.5 * nominal <= stats.n_refresh_windows <= 1.5 * nominal + n_units
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_no_refresh_means_no_windows(self, mode):
+        stats, _ = self._device_stats(mode, refresh=None)
+        assert stats.n_refresh_windows == 0
+        assert stats.refresh_ns == 0.0
+
+    def test_midflight_admission_keeps_finished_uids_stable(self):
+        """A job admitted mid-advance must not move finish times already
+        committed for disjoint-PE work (uid keys and values both)."""
+        mode = Interconnect.LISA
+        t1 = chain_tasks(n=4, pe=0, dur=10.0, uid0=0)
+        alone = EngineSession(BankModel(mode))
+        alone.admit(ir.from_tasks(t1))
+        alone.advance()
+        solo_ft = alone.stats().finish_times
+
+        s = EngineSession(BankModel(mode))
+        s.admit(ir.from_tasks(t1))
+        s.advance(until=20.0)                       # half the chain commits
+        late = s.admit(ir.from_tasks(chain_tasks(n=3, pe=5, dur=7.0)),
+                       at=20.0)
+        s.advance()
+        ft = s.stats().finish_times
+        # job 0 admitted first: offset 0, so its session uids ARE the
+        # solo uids — none may move
+        assert s.job(0).uid_offset == 0
+        assert {u: ft[u] for u in solo_ft} == solo_ft
+        off = s.job(late).uid_offset
+        assert ft[off + 2] == 41.0                  # 20 + 3 * 7

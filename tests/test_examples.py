@@ -17,6 +17,7 @@ CASES = {
     "quickstart.py": ("Table II", "improvement", "Device scale"),
     "pim_pipeline.py": ("NTT", "bit-exact"),
     "serve_batch.py": ("glm4-9b", "falcon-mamba-7b"),
+    "trace_viewer.py": ("moe-decode", ".trace.json", "ui.perfetto.dev"),
 }
 
 

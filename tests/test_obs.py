@@ -1,0 +1,302 @@
+"""Observability (repro.obs): recording changes nothing, exports pin bytes.
+
+The contract the whole subsystem hangs on: a :class:`~repro.obs.trace.
+Recorder` / :class:`~repro.obs.profile.EngineProfile` attached to an
+:class:`~repro.core.engine.EngineSession` is *observational* — every
+scheduled float is bit-for-bit the unobserved one — and everything it
+exports (Chrome trace JSON, metrics snapshots) is deterministic down to
+the byte.  Plus the metric primitives' units and the serving summary's
+small-sample honesty flags.
+"""
+
+import dataclasses
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.core import taskgraph
+from repro.core.engine import BankModel, EngineSession, RefreshSpec
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry
+from repro.device.batch import SweepConfig
+from repro.device.resources import DeviceModel
+from repro.obs.trace import record_sweep
+from repro.runtime.serve import ServingRuntime, summarize
+from repro.runtime.trace import TenantSpec, open_loop_trace
+
+GEOM = DeviceGeometry(channels=1, banks_per_channel=4)
+REFRESH = RefreshSpec(interval_ns=3900.0, duration_ns=350.0)
+
+
+def device_graph(mode, app="pmm", **kw):
+    from repro.device.partition import build_partitioned_ir
+    return build_partitioned_ir(app, mode, GEOM, **(kw or dict(n=16)))
+
+
+# --- recording is observational ---------------------------------------------------
+
+
+class TestRecordingChangesNothing:
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_recorded_stats_equal_plain(self, mode):
+        g = device_graph(mode)
+        plain = EngineSession(DeviceModel(mode, GEOM), refresh=REFRESH)
+        plain.admit(g)
+        plain.advance()
+        rec = obs.Recorder()
+        prof = obs.EngineProfile()
+        observed = EngineSession(DeviceModel(mode, GEOM), refresh=REFRESH,
+                                 recorder=rec, profile=prof)
+        observed.admit(g)
+        observed.advance()
+        assert observed.stats() == plain.stats()
+
+    def test_recorder_rejects_second_session(self):
+        rec = obs.Recorder()
+        EngineSession(BankModel(Interconnect.LISA), recorder=rec)
+        with pytest.raises(ValueError, match="already attached"):
+            EngineSession(BankModel(Interconnect.LISA), recorder=rec)
+
+
+# --- trace structure --------------------------------------------------------------
+
+
+class TestChromeTrace:
+    @pytest.fixture(scope="class")
+    def recorded(self):
+        cfg = SweepConfig.make("mm", Interconnect.SHARED_PIM, GEOM, n=16)
+        return record_sweep(cfg, refresh=REFRESH)
+
+    def test_events_well_formed(self, recorded):
+        doc = recorded.chrome_trace()
+        assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+        makespan_us = recorded._session.stats().makespan_ns / 1e3
+        for e in doc["traceEvents"]:
+            assert e["ph"] in ("X", "i", "C", "M")
+            if e["ph"] == "X":
+                assert e["dur"] >= 0.0
+                assert 0.0 <= e["ts"] <= e["ts"] + e["dur"] <= makespan_us
+
+    def test_every_token_has_a_named_track(self, recorded):
+        doc = recorded.chrome_trace()
+        names = {(e["pid"], e.get("tid")): e["args"]["name"]
+                 for e in doc["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "thread_name"}
+        model = recorded._session.model
+        for tid, want in enumerate(model.token_names()):
+            assert names[(0, tid)] == want
+        n_res = len(model.token_names())
+        for u, want in enumerate(model.refresh_unit_names()):
+            assert names[(0, n_res + u)] == want
+        # every X event on pid 0 lands on a named track
+        for e in doc["traceEvents"]:
+            if e["ph"] == "X" and e["pid"] == 0:
+                assert (0, e["tid"]) in names
+
+    def test_metadata_carries_provenance(self, recorded):
+        doc = recorded.chrome_trace({"extra": 1})
+        other = doc["otherData"]
+        assert other["interconnect"] == "shared_pim"
+        assert other["extra"] == 1
+        (job,) = other["jobs"]
+        assert job["n_tasks"] == recorded._session.job(0).n_tasks
+        assert len(job["graph_fingerprint"]) == 16
+
+    def test_refresh_tracks_present(self, recorded):
+        doc = recorded.chrome_trace()
+        n_res = len(recorded._session.model.token_names())
+        refresh_events = [e for e in doc["traceEvents"]
+                          if e["ph"] == "X" and e["pid"] == 0
+                          and e["tid"] >= n_res]
+        assert len(refresh_events) == len(recorded._refresh) > 0
+
+    def test_utilization_fractions(self, recorded):
+        util = obs.utilization(recorded)
+        assert util
+        for name, frac in util.items():
+            assert 0.0 <= frac <= 1.0, name
+        assert any(frac > 0.0 for frac in util.values())
+
+
+class TestGraphFingerprint:
+    def test_stable_and_sensitive(self):
+        a = taskgraph.build_ir("mm", Interconnect.LISA, n=8)
+        b = taskgraph.build_ir("mm", Interconnect.LISA, n=8)
+        c = taskgraph.build_ir("mm", Interconnect.SHARED_PIM, n=8)
+        assert obs.graph_fingerprint(a) == obs.graph_fingerprint(b)
+        assert obs.graph_fingerprint(a) != obs.graph_fingerprint(c)
+
+
+# --- byte determinism -------------------------------------------------------------
+
+
+class TestDeterminism:
+    def test_record_sweep_twice_byte_identical(self, tmp_path):
+        cfg = SweepConfig.make("qwen2-moe-a2.7b", Interconnect.LISA,
+                               DeviceGeometry(channels=1, banks_per_channel=4,
+                                              pes_per_bank=8),
+                               phase="decode", n_layers=2)
+        pa = record_sweep(cfg, refresh=REFRESH).dump(tmp_path / "a.json")
+        pb = record_sweep(cfg, refresh=REFRESH).dump(tmp_path / "b.json")
+        assert pa.read_bytes() == pb.read_bytes()
+        json.loads(pa.read_text())     # still valid JSON
+
+    def test_serving_trace_byte_identical(self, tmp_path):
+        tenants = [TenantSpec.make("a", "mm", rate_jps=2e5, banks=2, n=12),
+                   TenantSpec.make("b", "mm", rate_jps=1e5, banks=1, n=8)]
+        reqs = open_loop_trace(tenants, jobs_per_tenant=3, seed=3)
+
+        def one(path):
+            rt = ServingRuntime(Interconnect.SHARED_PIM, GEOM,
+                                recorder=obs.Recorder(), refresh=REFRESH)
+            rt.run(reqs)
+            return rt.export_trace(path)
+
+        pa = one(tmp_path / "a.json")
+        pb = one(tmp_path / "b.json")
+        assert pa.read_bytes() == pb.read_bytes()
+        other = json.loads(pa.read_text())["otherData"]
+        assert other["admission"] == "fifo"
+        assert "rewrite_logs" in other
+
+
+# --- metric primitives ------------------------------------------------------------
+
+
+class TestMetricPrimitives:
+    def test_counter_monotonic(self):
+        c = obs.Counter()
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_gauge_series_and_time_weighted_mean(self):
+        g = obs.Gauge()
+        assert g.last is None and g.peak is None
+        assert g.time_weighted_mean() == 0.0
+        g.record(0.0, 2.0)
+        g.record(10.0, 4.0)   # 2.0 held for the whole [0, 10) span
+        assert g.last == 4.0 and g.peak == 4.0
+        assert g.time_weighted_mean() == 2.0
+        assert g.series() == [(0.0, 2.0), (10.0, 4.0)]
+
+    def test_histogram_summary(self):
+        h = obs.Histogram()
+        assert h.summary() == {"n": 0}
+        for v in (1.0, 2.0, 3.0, 4.0):
+            h.observe(v)
+        s = h.summary(percentiles=(50.0,))
+        assert s["n"] == 4 and s["mean"] == 2.5
+        assert s["min"] == 1.0 and s["max"] == 4.0 and s["p50"] == 2.5
+
+    def test_registry_create_on_first_use_and_snapshot(self):
+        m = obs.MetricsRegistry()
+        m.counter("x").inc()
+        assert m.counter("x").value == 1       # same object back
+        m.gauge("g").record(0.0, 1.0)
+        m.histogram("h").observe(2.0)
+        snap = m.snapshot()
+        assert snap["counters"] == {"x": 1}
+        assert snap["gauges"]["g"]["last"] == 1.0
+        assert snap["histograms"]["h"]["n"] == 1
+
+    def test_slo_attainment(self):
+        rows = [dataclasses.make_dataclass("R", ["tenant", "latency_ns"])(t, v)
+                for t, v in [("a", 5.0), ("a", 15.0), ("b", 1.0)]]
+        att = obs.slo_attainment(rows, slo_ns=10.0)
+        assert att["a"] == {"n_jobs": 2, "attained": 1, "attainment": 0.5}
+        assert att["b"]["attainment"] == 1.0
+        with pytest.raises(ValueError):
+            obs.slo_attainment(rows, slo_ns=0.0)
+
+
+# --- self-profiling ---------------------------------------------------------------
+
+
+class TestEngineProfile:
+    def test_counts_match_graph(self):
+        mode = Interconnect.SHARED_PIM
+        g = device_graph(mode)
+        prof = obs.EngineProfile()
+        s = EngineSession(DeviceModel(mode, GEOM), profile=prof)
+        s.admit(g)
+        s.advance()
+        assert prof.n_advances == 1
+        assert prof.n_exec == g.n
+        summary = prof.summary()
+        assert summary["heap_pops"] == g.n
+        # every non-source task is pushed exactly once as its last
+        # dependency retires; sources were pushed at admit time, before
+        # the profiled advance
+        n_sources = int((g.dep_indptr[1:] == g.dep_indptr[:-1]).sum())
+        assert summary["heap_pushes"] == g.n - n_sources
+        assert summary["token_probes"] > 0
+        assert prof.events_per_sec > 0.0
+        assert summary["refresh_windows"] == 0
+
+    def test_empty_profile(self):
+        prof = obs.EngineProfile()
+        assert prof.events_per_sec == 0.0
+        assert prof.summary()["token_probes_per_task"] == 0.0
+
+
+# --- serving summary hardening ----------------------------------------------------
+
+
+class FakeResult:
+    def __init__(self, tenant, arrival, finish, admit=None):
+        self.tenant = tenant
+        self.arrival_ns = arrival
+        self.admit_ns = arrival if admit is None else admit
+        self.finish_ns = finish
+        self.latency_ns = finish - arrival
+        self.queue_ns = self.admit_ns - arrival
+
+
+class TestSummarizePerTenant:
+    def test_zero_samples(self):
+        s = summarize([])
+        assert s["per_tenant"] == {} and s["n_jobs"] == 0
+        assert s["percentile_min_samples"] == 2
+
+    def test_one_sample_flagged_unreliable(self):
+        s = summarize([FakeResult("t", 0.0, 10.0)])
+        row = s["per_tenant"]["t"]
+        assert row["n_jobs"] == 1 and row["mean_ns"] == 10.0
+        assert row["p99_ns"] == 10.0 and row["p99_reliable"] is False
+
+    def test_two_samples_reliable_at_default_threshold(self):
+        s = summarize([FakeResult("t", 0.0, 10.0),
+                       FakeResult("t", 0.0, 20.0)])
+        row = s["per_tenant"]["t"]
+        assert row["n_jobs"] == 2 and row["p99_reliable"] is True
+        assert row["mean_ns"] == 15.0
+
+    def test_min_samples_validation_and_threshold(self):
+        with pytest.raises(ValueError):
+            summarize([], min_samples=0)
+        s = summarize([FakeResult("t", 0.0, 10.0),
+                       FakeResult("t", 0.0, 20.0)], min_samples=3)
+        assert s["per_tenant"]["t"]["p99_reliable"] is False
+
+
+# --- module entry point -----------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_obs_module_entry_smoke(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "--out-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": str(Path(__file__).resolve().parent.parent
+                               / "src")})
+    assert proc.returncode == 0, proc.stderr
+    assert "ui.perfetto.dev" in proc.stdout
+    written = sorted(p.name for p in tmp_path.glob("*.trace.json"))
+    assert len(written) == 4 and "moe-decode.lisa.trace.json" in written
