@@ -31,6 +31,8 @@ _HEADLINES = {
                                       default=None)),
     "BENCH_obs": ("events_per_sec",
                   lambda d: d.get("events_per_sec")),
+    "BENCH_engine": ("events_per_sec",
+                     lambda d: d.get("events_per_sec")),
     "BENCH_passes": ("max_sp_gain_from_passes",
                      lambda d: max((c["shared_pim_gain"]
                                     for c in d.get("cells", [])

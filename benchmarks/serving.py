@@ -231,6 +231,15 @@ def main(argv=None) -> int:
     if args.budget_s is not None and wall > args.budget_s:
         failures.append(f"sweep {wall:.1f}s over budget {args.budget_s}s")
 
+    # wall trajectory: when regenerating over an existing artifact, keep
+    # the previous run's wall so engine speedups leave a recorded trail
+    prior_wall = None
+    try:
+        with open(args.out) as f:
+            prior_wall = json.load(f)["config"]["wall_s"]
+    except (OSError, KeyError, ValueError):
+        pass
+
     out = {
         "config": {
             "smoke": args.smoke, "banks": n_banks, "jobs_per_tenant": jobs,
@@ -241,6 +250,9 @@ def main(argv=None) -> int:
             "refresh": dataclassdict(refresh),
             "slo_ns": slo_ns, "slo_mult": args.slo_mult,
             "wall_s": wall,
+            "prior_wall_s": prior_wall,
+            "wall_speedup": (prior_wall / wall
+                             if prior_wall and wall > 0 else None),
         },
         "curves": rows,
         "sustained_load": sustained,

@@ -1,0 +1,989 @@
+"""Vectorized hot path for :class:`~repro.core.engine.EngineSession`.
+
+The scalar event loop in :mod:`repro.core.engine` dispatches one task per
+Python iteration: pop, probe each claimed token's free time, max, assign,
+push successors.  At HBM scale (thousands of PEs, hundreds of thousands of
+events) the interpreter overhead of that loop — not the scheduling math —
+is the simulator's bottleneck.  This module keeps the *decisions*
+bit-for-bit identical while executing them in bulk:
+
+* **Structure-of-arrays plans** (:class:`PlanSoA`): each
+  :class:`~repro.core.engine.Compiled` plan is flattened once into token-id
+  arrays with CSR offsets (claim tokens, stall groups) so a whole group of
+  tasks' free-time searches run as one ``np.maximum.reduceat`` over a
+  single gather, instead of a Python loop per token.
+* **Batched frontier dispatch**: :func:`advance` drains a *prefix* of the
+  ready heap whose members are provably independent — mutually disjoint
+  token claims, priorities strictly ahead of every member's successors, no
+  refresh due, no job completion when the caller asked to stop on one —
+  and executes the whole group with vectorized gathers/scatters.
+
+**The scalar engine is the differential oracle.**  Every cut condition
+above is an *equivalence* condition: a batch is exactly the sequence of
+tasks the scalar loop would have popped next, executed on disjoint tokens,
+so starts, ends, and every accumulator see the same IEEE operations in the
+same order (sequential float sums are reproduced with ``np.cumsum``, which
+sums left-to-right, never pairwise).  ``tests/test_engine_vector.py``
+asserts bit-for-bit equality against the scalar loop on random graphs,
+under refresh, horizons, and mid-flight admits; the golden schedules pin
+the vectorized path (the session default) against the preserved legacy
+references.
+
+General multi-segment moves (cross-bank) still execute per task — their
+segment interleavings are irreducibly sequential — but *inside* a batch:
+token disjointness makes their interleaving with vectorized members exact,
+and their accounting contributions are merged back in member order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from bisect import insort
+
+import numpy as np
+
+from repro.core.engine import CIRCUIT, Compiled
+
+#: largest number of tasks committed as one vectorized group (memory bound;
+#: formation usually cuts far earlier on token conflicts or priorities)
+BATCH_CAP = 8192
+
+#: batches at or under this size execute member-by-member through the
+#: scalar-exact fast path — the vectorized gathers carry ~30 fixed-cost
+#: numpy calls per dispatch, which narrow frontiers never amortize
+SCALAR_K = 32
+
+#: debug knob: disable the sorted-frontier column cache (perf A/B only —
+#: results are bit-identical either way, the cache only skips re-extraction)
+_COLCACHE = True
+
+_INF = float("inf")
+
+
+# --- structure-of-arrays plans ---------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanSoA:
+    """Flat-array view of a :class:`Compiled` plan (built once, cached).
+
+    ``kind`` is 0 for single-claim tasks (ops and pre-flattened intra-bank
+    moves — everything the vector path executes) and 1 for general
+    multi-segment moves (executed per task inside a batch).  The claim CSR
+    (``tok_indptr``/``tok_flat``) holds each kind-0 task's claimed tokens;
+    for kind-1 tasks it is empty and ``claim`` instead carries the union of
+    all segment tokens, used only for batch conflict detection.  Stall
+    groups mirror the exec tuples' ``stall_counts`` as a CSR of float
+    counts (``stall += cnt * span`` must multiply with the same IEEE
+    operands the scalar loop uses).
+    """
+
+    kind: np.ndarray            # int8[n]: 0 claim, 1 general
+    is_op: np.ndarray           # bool[n]
+    dur: np.ndarray             # f64[n] claim duration (0 for general)
+    tok_indptr: np.ndarray      # int64[n+1]
+    tok_flat: np.ndarray        # int64
+    sg_indptr: np.ndarray       # int64[n+1] stall-group CSR
+    sg_cnt: np.ndarray          # f64 stalled-PE count per group
+    claim: list                 # per task: int token, or tuple of tokens
+    simple: np.ndarray          # bool[n]: exactly one claimed token
+    tok0: np.ndarray            # int64[n]: that token (-1 when not simple)
+
+
+def get_soa(comp: Compiled) -> PlanSoA:
+    """The (cached) SoA view of a compiled plan."""
+    soa = comp.soa
+    if soa is None:
+        soa = comp.soa = _build_soa(comp)
+    return soa
+
+
+def _build_soa(comp: Compiled) -> PlanSoA:
+    plan = comp.exec_plan
+    n = len(plan)
+    kind = np.zeros(n, dtype=np.int8)
+    is_op = np.zeros(n, dtype=bool)
+    dur = np.zeros(n, dtype=np.float64)
+    tok_counts = np.zeros(n, dtype=np.int64)
+    sg_counts = np.zeros(n, dtype=np.int64)
+    tok_flat: list = []
+    sg_flat: list = []
+    claim: list = [None] * n
+    for i, p in enumerate(plan):
+        lp = len(p)
+        if lp == 2:
+            rid, du = p
+            claim[i] = rid
+            tok_flat.append(rid)
+            tok_counts[i] = 1
+            dur[i] = du
+            is_op[i] = True
+        elif lp == 3:
+            rids, stall_counts, du = p
+            claim[i] = rids
+            tok_flat.extend(rids)
+            tok_counts[i] = len(rids)
+            dur[i] = du
+            if stall_counts:
+                sg_flat.extend(stall_counts)
+                sg_counts[i] = len(stall_counts)
+        else:
+            kind[i] = 1
+            toks: dict = {}
+            for seg in p[0]:
+                if seg[0] == CIRCUIT:
+                    for r in seg[1]:
+                        toks[r] = None
+                else:
+                    for leg in (seg[1], seg[2], seg[3]):
+                        for r in leg:
+                            toks[r] = None
+            claim[i] = tuple(toks)
+    tok_indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(tok_counts, out=tok_indptr[1:])
+    sg_indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(sg_counts, out=sg_indptr[1:])
+    tok_flat_a = np.asarray(tok_flat, dtype=np.int64)
+    simple = tok_counts == 1
+    tok0 = np.full(n, -1, dtype=np.int64)
+    tok0[simple] = tok_flat_a[tok_indptr[:-1][simple]]
+    return PlanSoA(kind, is_op, dur, tok_indptr, tok_flat_a,
+                   sg_indptr, np.asarray(sg_flat, dtype=np.float64), claim,
+                   simple, tok0)
+
+
+# --- growable session arrays -----------------------------------------------------
+
+
+class GrowBuf:
+    """Amortized-doubling append buffer over a NumPy array."""
+
+    __slots__ = ("a", "n")
+
+    def __init__(self, dtype, cap: int = 64, *, seed=None):
+        self.a = np.empty(max(cap, 1), dtype=dtype)
+        self.n = 0
+        if seed is not None:
+            self.a[0] = seed
+            self.n = 1
+
+    def _grow(self, need: int) -> None:
+        if need > len(self.a):
+            b = np.empty(max(need, 2 * len(self.a)), dtype=self.a.dtype)
+            b[:self.n] = self.a[:self.n]
+            self.a = b
+
+    def extend(self, vals) -> None:
+        m = len(vals)
+        need = self.n + m
+        self._grow(need)
+        self.a[self.n:need] = vals
+        self.n = need
+
+    def extend_fill(self, m: int, value) -> None:
+        need = self.n + m
+        self._grow(need)
+        self.a[self.n:need] = value
+        self.n = need
+
+
+# --- session-side state ----------------------------------------------------------
+
+
+def init_state(session) -> None:
+    """Install the vectorized per-session state (called from __init__)."""
+    session.free = np.zeros(session.model.n_resources(), dtype=np.float64)
+    session._v_ready = GrowBuf(np.float64)
+    session._v_indeg = GrowBuf(np.int64)
+    session._v_finish = GrowBuf(np.float64)
+    session._v_kind = GrowBuf(np.int8)
+    session._v_is_op = GrowBuf(bool)
+    session._v_dur = GrowBuf(np.float64)
+    session._v_tok_indptr = GrowBuf(np.int64, seed=0)
+    session._v_tok_flat = GrowBuf(np.int64)
+    session._v_sg_indptr = GrowBuf(np.int64, seed=0)
+    session._v_sg_cnt = GrowBuf(np.float64)
+    session._v_succ_indptr = GrowBuf(np.int64, seed=0)
+    session._v_succ_flat = GrowBuf(np.int64)
+    session._v_simple = GrowBuf(bool)
+    session._v_tok0 = GrowBuf(np.int64)
+    # min successor -critical-path per task (the formation safety bound)
+    session._v_M = GrowBuf(np.float64)
+    # numpy mirrors of the session's _neg_cp/_guids lists: bulk successor
+    # pushes build their heap tuples from array gathers, not list indexing
+    session._v_negcp = GrowBuf(np.float64)
+    session._v_guids = GrowBuf(np.int64)
+    session._v_claim: list = []      # per-task claim tokens (int | tuple)
+    session._v_rq_toks = [np.asarray(toks, dtype=np.int64) for _, _, toks
+                          in sorted(session._rq, key=lambda t: t[1])]
+    # refresh units are normally contiguous token ranges (one block per
+    # bank): slice reduce/fill beats fancy indexing ~4x per window
+    session._v_rq_bounds = []
+    for ta in session._v_rq_toks:
+        lo = int(ta[0]) if len(ta) else 0
+        contig = len(ta) > 0 and bool(
+            (ta == np.arange(lo, lo + len(ta))).all())
+        session._v_rq_bounds.append((lo, lo + len(ta)) if contig else None)
+    # the frontier list is kept *sorted* (not heap-ordered); admits and
+    # batch pushes append unsorted and flag a re-sort
+    session._heap_dirty = False
+
+
+def min_succ_neg_cp(succ_indptr: np.ndarray, succ_flat: np.ndarray,
+                    neg_cp: np.ndarray) -> np.ndarray:
+    """Per task, the min ``-critical_path`` over its successors (inf if none).
+
+    The batch-formation safety bound: a heap candidate whose key is
+    strictly ahead of every already-drained member's successor bound
+    cannot be overtaken by anything those members push.
+    """
+    n = len(succ_indptr) - 1
+    counts = np.diff(succ_indptr)
+    m = np.full(n, _INF, dtype=np.float64)
+    nz = counts > 0
+    if nz.any():
+        m[nz] = np.minimum.reduceat(neg_cp[succ_flat], succ_indptr[:-1][nz])
+    return m
+
+
+def admit_state(session, g, comp: Compiled, at: float, base: int,
+                m_local: np.ndarray) -> None:
+    """Append one admitted graph's arrays to the session buffers."""
+    n = g.n
+    soa = get_soa(comp)
+    session._v_ready.extend_fill(n, at)
+    session._v_indeg.extend(np.diff(g.dep_indptr))
+    session._v_finish.extend_fill(n, 0.0)
+    session._v_kind.extend(soa.kind)
+    session._v_is_op.extend(soa.is_op)
+    session._v_dur.extend(soa.dur)
+    session._v_tok_indptr.extend(soa.tok_indptr[1:] + session._v_tok_flat.n)
+    session._v_tok_flat.extend(soa.tok_flat)
+    session._v_sg_indptr.extend(soa.sg_indptr[1:] + session._v_sg_cnt.n)
+    session._v_sg_cnt.extend(soa.sg_cnt)
+    succ_indptr, succ_flat = g.successors()
+    session._v_succ_indptr.extend(succ_indptr[1:] + session._v_succ_flat.n)
+    session._v_succ_flat.extend(succ_flat + base if base else succ_flat)
+    session._v_simple.extend(soa.simple)
+    session._v_tok0.extend(soa.tok0)
+    session._v_M.extend(m_local)
+    session._v_claim.extend(soa.claim)
+
+
+# --- sequential-order float reduction --------------------------------------------
+
+
+def _seqsum(base: float, contrib: np.ndarray) -> float:
+    """``base + c0 + c1 + ...`` with strictly left-to-right IEEE adds.
+
+    ``np.cumsum`` accumulates sequentially (unlike ``np.sum``'s pairwise
+    tree), so this reproduces the scalar loop's accumulator bit-for-bit.
+    """
+    if len(contrib) == 0:
+        return base
+    a = np.empty(len(contrib) + 1, dtype=np.float64)
+    a[0] = base
+    a[1:] = contrib
+    return float(np.cumsum(a)[-1])
+
+
+# --- general (multi-segment) member execution ------------------------------------
+
+
+def _exec_general(p, dep_t, free, bus_busy, energy, mv_out, st_out,
+                  rec_segs, i):
+    """Scalar-exact execution of one general move against the numpy tokens.
+
+    Mirrors the scalar loop's multi-segment branch; move-busy and stall
+    contributions are *collected* (``mv_out``/``st_out``) so the caller can
+    merge them with the vectorized members' contributions in member order.
+    Returns ``(end, energy)``.
+    """
+    end = dep_t
+    for _sk, seg in enumerate(p[0]):
+        if seg[0] == CIRCUIT:
+            _, rids, stall_counts, du, busy_keys, ej = seg
+            s = dep_t
+            for r in rids:
+                f = free[r]
+                if f > s:
+                    s = f
+            # float() is bit-exact on float64 and keeps the session's
+            # accounting accumulators plain Python floats
+            s = float(s)
+            e = s + du
+            for r in rids:
+                free[r] = e
+            if stall_counts:
+                span = e - s
+                for cnt in stall_counts:
+                    st_out.append(cnt * span)
+            if busy_keys:
+                span = e - s
+                for k in busy_keys:
+                    bus_busy[k] += span
+            mv_out.append(du)
+            if rec_segs is not None:
+                rec_segs.append((i, _sk, -1, s, e))
+        else:
+            (_, leg1, leg2, leg3, drain, transit, fill, drain1,
+             transit1, fill1, mb, busy_keys, ej) = seg
+            s1 = dep_t
+            for r in leg1:
+                f = free[r]
+                if f > s1:
+                    s1 = f
+            s1 = float(s1)
+            e1 = s1 + drain
+            for r in leg1:
+                free[r] = e1
+            s2 = s1 + drain1
+            for r in leg2:
+                f = free[r]
+                if f > s2:
+                    s2 = f
+            s2 = float(s2)
+            e2 = s2 + transit
+            for r in leg2:
+                free[r] = e2
+            for k in busy_keys:
+                bus_busy[k] += transit
+            s3 = s2 + transit1
+            for r in leg3:
+                f = free[r]
+                if f > s3:
+                    s3 = f
+            s3 = float(s3)
+            e = s3 + fill
+            alt = e2 + fill1
+            if alt > e:
+                e = alt
+            for r in leg3:
+                free[r] = e
+            mv_out.append(mb)
+            if rec_segs is not None:
+                rec_segs.append((i, _sk, 0, s1, e1))
+                rec_segs.append((i, _sk, 1, s2, e2))
+                rec_segs.append((i, _sk, 2, s3, e))
+        if ej:
+            energy += ej
+        if e > end:
+            end = e
+    return end, energy
+
+
+# --- the vectorized event loop ---------------------------------------------------
+
+
+def advance(session, until: float | None = None, *,
+            stop_on_completion: bool = False) -> list[int]:
+    """Vectorized counterpart of ``EngineSession.advance`` (same contract)."""
+    hz = _INF if until is None else until
+    heap = session._heap
+    free = session.free
+    exec_plan = session._exec_plan
+    n_tasks = len(exec_plan)
+    ready = session._v_ready.a
+    indeg = session._v_indeg.a
+    finish = session._v_finish.a
+    kind = session._v_kind.a
+    is_op = session._v_is_op.a
+    dur = session._v_dur.a
+    tok_ip = session._v_tok_indptr.a
+    tok_flat = session._v_tok_flat.a
+    sg_ip = session._v_sg_indptr.a
+    sg_cnt = session._v_sg_cnt.a
+    succ_ip = session._v_succ_indptr.a
+    succ_flat = session._v_succ_flat.a
+    M = session._v_M.a
+    simple = session._v_simple.a
+    tok0 = session._v_tok0.a
+    negcp_a = session._v_negcp.a
+    guids_a = session._v_guids.a
+    claim = session._v_claim
+    neg_cp = session._neg_cp
+    guids = session._guids
+    job_of = session._job_of
+    job_rem = session._job_rem
+    job_fin = session._job_fin
+    single_job = len(session._job_admit) == 1
+    rq = session._rq
+    rq_toks = session._v_rq_toks
+    rq_bounds = session._v_rq_bounds
+    spec = session.refresh
+    op_busy = session._op_busy
+    move_busy = session._move_busy
+    stall = session._stall
+    energy = session._energy
+    bus_busy = session._bus_busy
+    refresh_ns = session._refresh_ns
+    n_refresh = session._n_refresh
+    completed = session._completed_backlog
+    session._completed_backlog = []
+    n_exec = 0
+
+    rec = session.recorder
+    prof = session.profile
+    observe = rec is not None or prof is not None
+    rec_tasks = rec._tasks if rec is not None else None
+    rec_segs = rec._segs if rec is not None else None
+    probes = vec_probes = n_batches = n_batched = heap_saved = 0
+    if prof is not None:
+        _wall0 = time.perf_counter()
+        _heap0 = len(heap)
+        _refresh0 = n_refresh
+
+    heappush, heappop = heapq.heappush, heapq.heappop
+    # the frontier is a *lexicographically sorted list* of the scalar
+    # loop's heap tuples — a sorted list satisfies the heap invariant, and
+    # sortedness turns batch formation into an index scan over a prefix
+    # (no per-member heappop).  Admits append unsorted (dirty flag);
+    # Timsort re-sorts adaptively: after `del heap[:k]` the remainder is
+    # one sorted run, and each batch only appends its successor pushes
+    need_sort = session._heap_dirty
+    session._heap_dirty = False
+    probe0 = 64       # adaptive vector-formation window start
+    # column cache over the sorted frontier: when the previous batch
+    # pushed nothing, the frontier only shrinks from the front, so its key
+    # columns can be transposed to arrays once and windowed by offset
+    cvalid = False
+    prev_pushed = True
+    coff = 0
+    ck0 = ck1 = cpos = None
+    while heap:
+        if completed and stop_on_completion:
+            break
+        if need_sort:
+            heap.sort()
+            need_sort = False
+            cvalid = False
+        pushed = False
+        h = heap[0]
+        if h[1] >= hz:
+            break
+
+        # --- batch formation: a provably-independent sorted prefix -------
+        i0 = h[3]
+        dep0 = ready[i0]
+        if rq and rq[0][0] <= dep0:
+            # the schedule frontier passed refresh due times: apply each
+            # unit's CIRCUIT claim (floored at its due time) and requeue
+            rint = spec.interval_ns
+            rdur = spec.duration_ns
+            while rq and rq[0][0] <= dep0:
+                due, u, toks = heappop(rq)
+                b = rq_bounds[u]
+                if b is None:
+                    ta = rq_toks[u]
+                    fm = free[ta].max()
+                else:
+                    fm = free[b[0]:b[1]].max()
+                s = due if due > fm else fm
+                e = s + rdur
+                k = 1
+                if rec is None:
+                    # collapse this unit's further windows already past the
+                    # frontier that start clean (due' >= e): after a refresh
+                    # every token equals e, so the next window's floor-max is
+                    # a comparison, not a reduce.  Unit token sets are
+                    # disjoint and refresh_ns accrues a constant, so taking
+                    # them out of cross-unit due order is bit-exact — only
+                    # the recorder observes the order, hence the gate
+                    nxt = due + rint
+                    while nxt <= dep0 and nxt >= e:
+                        due = nxt
+                        e = due + rdur
+                        k += 1
+                        nxt = due + rint
+                else:
+                    rec._refresh.append((u, float(s), float(e)))
+                if b is None:
+                    free[ta] = e
+                else:
+                    free[b[0]:b[1]] = e
+                n_refresh += k
+                if k == 1:
+                    refresh_ns += rdur
+                else:
+                    # one add per window: += of a constant depends only on
+                    # the add count, matching the scalar accumulator exactly
+                    for _ in range(k):
+                        refresh_ns += rdur
+                heappush(rq, (due + rint, u, toks))
+        rq_due = rq[0][0] if rq else _INF
+        members = [i0]
+        append = members.append
+        toks0 = claim[i0]
+        seen = {toks0} if type(toks0) is int else set(toks0)
+        seen_add = seen.add
+        min_m = M[i0]
+        W = len(heap)
+        if W > BATCH_CAP:
+            W = BATCH_CAP
+        k = 1
+        if stop_on_completion:
+            sjobs = {job_of[i0]: 1}
+            if job_rem[job_of[i0]] != 1:
+                while k < W:
+                    hk = heap[k]
+                    # heap-order safety: anything drained members push has
+                    # key first-component >= min_m; strictly smaller means
+                    # this candidate is still the scalar loop's next pop
+                    if hk[0] >= min_m or hk[1] >= hz:
+                        break
+                    pos = hk[3]
+                    if rq_due <= ready[pos]:
+                        break
+                    toks = claim[pos]
+                    if type(toks) is int:
+                        if toks in seen:
+                            break
+                        seen_add(toks)
+                    else:
+                        if not seen.isdisjoint(toks):
+                            break
+                        seen.update(toks)
+                    m = M[pos]
+                    if m < min_m:
+                        min_m = m
+                    append(pos)
+                    k += 1
+                    j = job_of[pos]
+                    c = sjobs.get(j, 0) + 1
+                    sjobs[j] = c
+                    if job_rem[j] == c:
+                        break
+        else:
+            # a short scalar scan sizes the batch cheaply; if it hits the
+            # switch bound without a cut the frontier is wide, and the
+            # same cuts are re-evaluated as numpy masks over a window that
+            # grows geometrically until one fires
+            quick = SCALAR_K if W > SCALAR_K else W
+            no_rq = rq_due is _INF
+            while k < quick:
+                hk = heap[k]
+                if hk[0] >= min_m or hk[1] >= hz:
+                    break
+                pos = hk[3]
+                if not no_rq and rq_due <= ready[pos]:
+                    break
+                toks = claim[pos]
+                if type(toks) is int:
+                    if toks in seen:
+                        break
+                    seen_add(toks)
+                else:
+                    if not seen.isdisjoint(toks):
+                        break
+                    seen.update(toks)
+                m = M[pos]
+                if m < min_m:
+                    min_m = m
+                append(pos)
+                k += 1
+            if k == quick and quick < W \
+                    and bool(simple[np.asarray(members)].all()):
+                if not cvalid and not prev_pushed and _COLCACHE:
+                    # stable frontier: transpose it to column arrays once;
+                    # until something is pushed, later batches window it
+                    # by offset instead of re-extracting tuples
+                    cols = list(zip(*heap))
+                    ck0 = np.asarray(cols[0], dtype=np.float64)
+                    ck1 = np.asarray(cols[1], dtype=np.float64)
+                    cpos = np.asarray(cols[3], dtype=np.int64)
+                    coff = 0
+                    cvalid = True
+                probe = probe0
+                while True:
+                    if probe > W:
+                        probe = W
+                    if cvalid:
+                        k0 = ck0[coff:coff + probe]
+                        k1v = ck1[coff:coff + probe]
+                        pos_a = cpos[coff:coff + probe]
+                    else:
+                        cols = list(zip(*heap[:probe]))
+                        k0 = np.asarray(cols[0], dtype=np.float64)
+                        k1v = None
+                        pos_a = np.asarray(cols[3], dtype=np.int64)
+                    viol = np.empty(probe, dtype=bool)
+                    viol[0] = False
+                    # running-min safety bound: candidate j checks against
+                    # min(M) over the accepted 0..j-1 prefix
+                    minacc = np.minimum.accumulate(M[pos_a])
+                    np.greater_equal(k0[1:], minacc[:-1], out=viol[1:])
+                    simple_a = simple[pos_a]
+                    viol |= ~simple_a
+                    if hz != _INF:
+                        if k1v is None:
+                            k1v = np.asarray(cols[1], dtype=np.float64)
+                        viol |= k1v >= hz
+                    if not no_rq:
+                        viol |= rq_due <= ready[pos_a]
+                    # token conflicts: every simple candidate claims one
+                    # token, so a conflict is a duplicate — mark each
+                    # repeat occurrence (stable sort keeps window order)
+                    t_a = tok0[pos_a]
+                    order = np.argsort(t_a, kind="stable")
+                    st = t_a[order]
+                    dup = st[1:] == st[:-1]
+                    if dup.any():
+                        viol[order[1:][dup]] = True
+                    if viol.any():
+                        k = int(np.argmax(viol))
+                        break
+                    if probe >= W:
+                        k = probe
+                        break
+                    probe <<= 3
+                probe0 = 64 if k < 32 else (
+                    BATCH_CAP if k >= BATCH_CAP // 2 else 2 * k)
+                if k < W and not simple_a[k]:
+                    # the window stopped at a multi-token move, but the
+                    # scalar scan can keep batching via set disjointness —
+                    # resume it with state rebuilt from the vector prefix
+                    members = pos_a[:k].tolist()
+                    append = members.append
+                    seen = set(t_a[:k].tolist())
+                    seen_add = seen.add
+                    min_m = minacc[k - 1]
+                    while k < W:
+                        hk = heap[k]
+                        if hk[0] >= min_m or hk[1] >= hz:
+                            break
+                        pos = hk[3]
+                        if not no_rq and rq_due <= ready[pos]:
+                            break
+                        toks = claim[pos]
+                        if type(toks) is int:
+                            if toks in seen:
+                                break
+                            seen_add(toks)
+                        else:
+                            if not seen.isdisjoint(toks):
+                                break
+                            seen.update(toks)
+                        m = M[pos]
+                        if m < min_m:
+                            min_m = m
+                        append(pos)
+                        k += 1
+                else:
+                    members = None
+                    mem = pos_a[:k]
+        del heap[:k]
+        if cvalid:
+            coff += k
+
+        if k <= SCALAR_K:
+            # small-batch fast path: the vectorized gathers cost ~30
+            # fixed numpy calls per dispatch, which only pays for itself
+            # on wide groups — narrow ones execute member-by-member the
+            # way the scalar oracle does (same IEEE operations against
+            # the numpy token state, successor pushes interleaved)
+            for i0 in (members if members is not None else mem.tolist()):
+                dep0 = ready[i0]
+                p = exec_plan[i0]
+                if kind[i0]:
+                    mv_out: list = []
+                    st_out: list = []
+                    e, energy = _exec_general(p, float(dep0), free,
+                                              bus_busy, energy, mv_out,
+                                              st_out, rec_segs, i0)
+                    for du in mv_out:
+                        move_busy += du
+                    for sv in st_out:
+                        stall += sv
+                    if observe:
+                        probes += len(claim[i0])
+                elif len(p) == 2:
+                    rid, du = p
+                    f = free[rid]
+                    s = float(f) if f > dep0 else float(dep0)
+                    e = s + du
+                    free[rid] = e
+                    op_busy += du
+                    if observe:
+                        probes += 1
+                        if rec_tasks is not None:
+                            rec_tasks.append((i0, s, e))
+                else:
+                    rids, stall_counts, du = p
+                    s = dep0
+                    for r in rids:
+                        f = free[r]
+                        if f > s:
+                            s = f
+                    s = float(s)
+                    e = s + du
+                    for r in rids:
+                        free[r] = e
+                    move_busy += du
+                    if stall_counts:
+                        span = e - s
+                        for cnt in stall_counts:
+                            stall += cnt * span
+                    if observe:
+                        probes += len(rids)
+                        if rec_tasks is not None:
+                            rec_tasks.append((i0, s, e))
+                finish[i0] = e
+                a = succ_ip[i0]
+                b = succ_ip[i0 + 1]
+                if b > a:
+                    push_items = []
+                    for sc in succ_flat[a:b].tolist():
+                        if ready[sc] < e:
+                            ready[sc] = e
+                        nd = indeg[sc] - 1
+                        indeg[sc] = nd
+                        if not nd:
+                            push_items.append((neg_cp[sc], e,
+                                               guids[sc], sc))
+                    if push_items:
+                        heap_saved += len(push_items)
+                        pushed = True
+                        cvalid = False
+                        if not need_sort \
+                                and len(push_items) << 5 < len(heap):
+                            for it in push_items:
+                                insort(heap, it)
+                        else:
+                            heap.extend(push_items)
+                            need_sort = True
+                j = 0 if single_job else job_of[i0]
+                if job_fin[j] < e:
+                    job_fin[j] = e
+                rem = job_rem[j] - 1
+                job_rem[j] = rem
+                if not rem:
+                    completed.append(j)
+                    if rec is not None:
+                        rec._jobdone.append((j, job_fin[j]))
+            n_exec += k
+            n_batches += 1
+            if k > 1:
+                n_batched += k
+            prev_pushed = pushed
+            continue
+
+        # --- execute the batch -------------------------------------------
+        if members is not None:
+            mem = np.array(members, dtype=np.int64)
+        deps = ready[mem]
+        kindv = kind[mem]
+        ends = np.empty(k, dtype=np.float64)
+        gen_sel = np.nonzero(kindv)[0]
+        has_gen = len(gen_sel) > 0
+        gen_results: list = []
+        if has_gen:
+            # general multi-segment moves run per member (token
+            # disjointness makes any execution order exact); their
+            # accounting contributions merge back in member order below
+            for gi in gen_sel.tolist():
+                i = int(mem[gi])
+                mv_out: list = []
+                st_out: list = []
+                e, energy = _exec_general(
+                    exec_plan[i], float(deps[gi]), free, bus_busy, energy,
+                    mv_out, st_out, rec_segs, i)
+                ends[gi] = e
+                gen_results.append((mv_out, st_out))
+                if observe:
+                    probes += len(claim[i])
+            cl_sel = np.nonzero(kindv == 0)[0]
+            cl = mem[cl_sel]
+            cdeps = deps[cl_sel]
+        else:
+            cl_sel = None
+            cl = mem
+            cdeps = deps
+
+        if len(cl):
+            starts_i = tok_ip[cl]
+            counts = tok_ip[cl + 1] - starts_i
+            total = int(counts.sum())
+            seg_starts = np.cumsum(counts) - counts
+            gather = tok_flat[np.repeat(starts_i - seg_starts, counts)
+                              + np.arange(total, dtype=np.int64)]
+            permax = np.maximum.reduceat(free[gather], seg_starts)
+            s = np.maximum(cdeps, permax)
+            cdur = dur[cl]
+            e = s + cdur
+            free[gather] = np.repeat(e, counts)
+            if cl_sel is None:
+                ends[:] = e
+            else:
+                ends[cl_sel] = e
+            opsel = is_op[cl]
+            op_busy = _seqsum(op_busy, cdur[opsel])
+            span = e - s
+            g_starts = sg_ip[cl]
+            gcounts = sg_ip[cl + 1] - g_starts
+            g_total = int(gcounts.sum())
+            if g_total:
+                gseg = np.cumsum(gcounts) - gcounts
+                g_gather = np.repeat(g_starts - gseg, gcounts) \
+                    + np.arange(g_total, dtype=np.int64)
+                st_contrib = sg_cnt[g_gather] * np.repeat(span, gcounts)
+            else:
+                st_contrib = None
+            if not has_gen:
+                move_busy = _seqsum(move_busy, cdur[~opsel])
+                if st_contrib is not None:
+                    stall = _seqsum(stall, st_contrib)
+            if observe:
+                probes += total
+                vec_probes += total
+                if rec_tasks is not None:
+                    sl = s.tolist()
+                    el = e.tolist()
+                    for ci, i in enumerate(cl.tolist()):
+                        rec_tasks.append((i, sl[ci], el[ci]))
+        if has_gen:
+            # merge move-busy / stall contributions back into member order
+            mv_seq: list = []
+            st_seq: list = []
+            if len(cl):
+                cl_mv = cdur.tolist()
+                cl_isop = opsel.tolist()
+                if st_contrib is not None:
+                    gc_l = gcounts.tolist()
+                    st_l = st_contrib.tolist()
+                else:
+                    gc_l = [0] * len(cl)
+                    st_l = []
+            ci = sti = 0
+            g_iter = iter(gen_results)
+            for km in kindv.tolist():
+                if km:
+                    mv_o, st_o = next(g_iter)
+                    mv_seq.extend(mv_o)
+                    st_seq.extend(st_o)
+                else:
+                    if not cl_isop[ci]:
+                        mv_seq.append(cl_mv[ci])
+                    gc = gc_l[ci]
+                    if gc:
+                        st_seq.extend(st_l[sti:sti + gc])
+                        sti += gc
+                    ci += 1
+            move_busy = _seqsum(move_busy,
+                                np.asarray(mv_seq, dtype=np.float64))
+            stall = _seqsum(stall, np.asarray(st_seq, dtype=np.float64))
+
+        finish[mem] = ends
+
+        # --- successors: ready-time maxes, indeg, new heap entries -------
+        s_start = succ_ip[mem]
+        s_cnt = succ_ip[mem + 1] - s_start
+        n_edges = int(s_cnt.sum())
+        if n_edges:
+            eseg = np.cumsum(s_cnt) - s_cnt
+            occ = succ_flat[np.repeat(s_start - eseg, s_cnt)
+                            + np.arange(n_edges, dtype=np.int64)]
+            occ_end = np.repeat(ends, s_cnt)
+            order = np.argsort(occ, kind="stable")
+            so = occ[order]
+            se = occ_end[order]
+            bound = np.empty(n_edges, dtype=bool)
+            bound[0] = True
+            np.not_equal(so[1:], so[:-1], out=bound[1:])
+            grp_first = np.nonzero(bound)[0]
+            uniq = so[grp_first]
+            gmax = np.maximum.reduceat(se, grp_first)
+            ready[uniq] = np.maximum(ready[uniq], gmax)
+            dec = np.diff(grp_first, append=n_edges)
+            nd = indeg[uniq] - dec
+            indeg[uniq] = nd
+            newly = nd == 0
+            if newly.any():
+                grp_last = np.empty(len(grp_first), dtype=np.int64)
+                grp_last[:-1] = grp_first[1:]
+                grp_last[-1] = n_edges
+                grp_last -= 1
+                pp = uniq[newly]
+                # the scalar loop keys each push with the end of the member
+                # that zeroed the indegree — the successor's last in-batch
+                # dependency in member order (stable sort preserves it)
+                pr = se[grp_last][newly]
+                # frontier content (a set keyed by total-order tuples) is
+                # what the prefix scan observes, so the insert strategy is
+                # invisible to ordering: few pushes binary-insert (O(log n)
+                # search plus a C memmove each); many pushes are lexsorted
+                # and bulk-appended as one ascending run, which the next
+                # adaptive Timsort merges in near-linear time
+                npush = len(pp)
+                heap_saved += npush
+                pushed = True
+                cvalid = False
+                png = negcp_a[pp]
+                pgu = guids_a[pp]
+                if not need_sort and npush << 5 < len(heap):
+                    for it in zip(png.tolist(), pr.tolist(),
+                                  pgu.tolist(), pp.tolist()):
+                        insort(heap, it)
+                else:
+                    o2 = np.lexsort((pp, pgu, pr, png))
+                    heap.extend(zip(png[o2].tolist(), pr[o2].tolist(),
+                                    pgu[o2].tolist(), pp[o2].tolist()))
+                    need_sort = True
+
+        # --- job bookkeeping ---------------------------------------------
+        if single_job:
+            mx = float(ends.max())
+            if job_fin[0] < mx:
+                job_fin[0] = mx
+            rem = job_rem[0] - k
+            job_rem[0] = rem
+            if not rem:
+                completed.append(0)
+                if rec is not None:
+                    rec._jobdone.append((0, job_fin[0]))
+        else:
+            el = ends.tolist()
+            for idx, i in enumerate(members if members is not None
+                                    else mem.tolist()):
+                end = el[idx]
+                j = job_of[i]
+                if job_fin[j] < end:
+                    job_fin[j] = end
+                rem = job_rem[j] - 1
+                job_rem[j] = rem
+                if not rem:
+                    completed.append(j)
+                    if rec is not None:
+                        rec._jobdone.append((j, job_fin[j]))
+        n_exec += k
+        n_batches += 1
+        if k > 1:
+            n_batched += k
+        prev_pushed = pushed
+
+    session._n_live -= n_exec
+    if not heap and session._n_live:
+        raise RuntimeError("engine deadlock: not all tasks executed "
+                           "(graph validation should have caught this)")
+    session._op_busy = op_busy
+    session._move_busy = move_busy
+    session._stall = stall
+    session._energy = energy
+    session._refresh_ns = refresh_ns
+    session._n_refresh = n_refresh
+    if prof is not None:
+        prof.record_advance(
+            wall_s=time.perf_counter() - _wall0, n_exec=n_exec,
+            heap_pushes=len(heap) - _heap0 + n_exec,
+            token_probes=probes,
+            refresh_windows=n_refresh - _refresh0,
+            batches=n_batches, batched_tasks=n_batched,
+            vector_probes=vec_probes, heap_ops_avoided=heap_saved)
+    if until is None:
+        mx = float(finish[:n_tasks].max()) if n_tasks else 0.0
+        if mx > session.now:
+            session.now = mx
+    elif until > session.now:
+        session.now = until
+    return completed

@@ -131,8 +131,10 @@ def schedule(tasks_in: Iterable[Task], mode: Interconnect,
                 hi = max((src, *dsts))
                 start = max(dep_t, *(bank.pe_free[p] for p in range(lo, hi + 1)))
                 end = start + dur
+                # every PE in the span stalls for the whole move: start is
+                # already the span max, so each PE's hold equals the span
+                stall += (hi - lo + 1) * (end - start)
                 for p in range(lo, hi + 1):
-                    stall += end - max(start, bank.pe_free[p])
                     bank.pe_free[p] = end
             else:
                 # Shared-PIM: bus + shared-row tokens only; PEs keep running.

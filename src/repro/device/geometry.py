@@ -26,15 +26,23 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class DeviceGeometry:
-    """Shape of one DRAM device for the hierarchical simulator."""
+    """Shape of one DRAM device (or a fleet of them) for the simulator.
+
+    ``devices`` stacks whole devices into a fleet: each device keeps its
+    own channels/groups/banks, and cross-device transfers ride per-device
+    off-package links (the ``"fleet"`` route class).  ``channels`` etc.
+    remain *per-device* counts; ``n_channels``/``n_groups``/``n_banks``
+    are fleet-wide totals.
+    """
 
     channels: int = 1
     banks_per_channel: int = 1
     bank_groups_per_channel: int = 1
     pes_per_bank: int = 16
+    devices: int = 1
 
     def __post_init__(self) -> None:
-        for field in ("channels", "banks_per_channel",
+        for field in ("devices", "channels", "banks_per_channel",
                       "bank_groups_per_channel", "pes_per_bank"):
             v = getattr(self, field)
             if not isinstance(v, int) or v < 1:
@@ -52,12 +60,21 @@ class DeviceGeometry:
         return self.banks_per_channel // self.bank_groups_per_channel
 
     @property
-    def n_banks(self) -> int:
+    def banks_per_device(self) -> int:
         return self.channels * self.banks_per_channel
 
     @property
+    def n_channels(self) -> int:
+        """Fleet-wide channel count (``devices x channels``)."""
+        return self.devices * self.channels
+
+    @property
+    def n_banks(self) -> int:
+        return self.devices * self.channels * self.banks_per_channel
+
+    @property
     def n_groups(self) -> int:
-        return self.channels * self.bank_groups_per_channel
+        return self.devices * self.channels * self.bank_groups_per_channel
 
     @property
     def total_pes(self) -> int:
@@ -77,10 +94,14 @@ class DeviceGeometry:
         return bank * self.pes_per_bank + local % self.pes_per_bank
 
     def channel_of_bank(self, bank: int) -> int:
+        """Fleet-global channel index (banks are numbered device-major)."""
         return bank // self.banks_per_channel
 
+    def device_of_bank(self, bank: int) -> int:
+        return bank // self.banks_per_device
+
     def group_of_bank(self, bank: int) -> int:
-        """Global bank-group index (unique across channels)."""
+        """Global bank-group index (unique across channels and devices)."""
         ch = self.channel_of_bank(bank)
         within = (bank % self.banks_per_channel) // self.banks_per_group
         return ch * self.bank_groups_per_channel + within
@@ -93,7 +114,8 @@ class DeviceGeometry:
         ``"intra"``   same bank (no transit; intra-bank interconnect only)
         ``"group"``   same bank group (one bank-group bus hop)
         ``"channel"`` same channel, different group (group buses + channel bus)
-        ``"device"``  different channels (both channels' I/O)
+        ``"device"``  same device, different channels (both channels' I/O)
+        ``"fleet"``   different devices (both devices' off-package links)
         """
         if src_bank == dst_bank:
             return "intra"
@@ -101,10 +123,13 @@ class DeviceGeometry:
             return "group"
         if self.channel_of_bank(src_bank) == self.channel_of_bank(dst_bank):
             return "channel"
-        return "device"
+        if self.device_of_bank(src_bank) == self.device_of_bank(dst_bank):
+            return "device"
+        return "fleet"
 
     def describe(self) -> str:
-        return (f"{self.channels}ch x {self.bank_groups_per_channel}bg x "
+        dev = f"{self.devices}dev x " if self.devices > 1 else ""
+        return (f"{dev}{self.channels}ch x {self.bank_groups_per_channel}bg x "
                 f"{self.banks_per_group}banks x {self.pes_per_bank}PEs "
                 f"({self.n_banks} banks, {self.total_pes} PEs)")
 

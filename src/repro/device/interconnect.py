@@ -16,7 +16,15 @@ route      bus resources held                                 ns / 8KB row
 group      one bank-group global bus                          grb_stream_ns
 channel    both group buses + the channel I/O bus             channel_stream_ns
 device     both group buses + both channels' I/O              channel + grb
+fleet      the above + both devices' off-package links        2x channel + grb
 ========== ================================================= ================
+
+The ``fleet`` route crosses device boundaries: the row exits through the
+source device's channel I/O, flies the off-package link, and is written in
+through the destination device's channel I/O — two full channel-stream
+legs instead of one, which is exactly the HBM-PIM fleet model's
+``FC_devices`` cost structure (off-package transfers are priced as a
+second I/O crossing, not a new technology constant).
 
 The two interconnects differ in *concurrency*, exactly as intra-bank:
 
@@ -53,6 +61,11 @@ def transit_ns_per_row(route: str, t: T.DramTiming = T.DDR3_1600) -> float:
         return t.channel_stream_ns
     if route == "device":
         return t.channel_stream_ns + t.grb_stream_ns
+    if route == "fleet":
+        # exit the source device's channel I/O, cross the off-package link,
+        # enter the destination device's channel I/O: two I/O crossings plus
+        # the group-bus hop the device route already pays
+        return 2 * t.channel_stream_ns + t.grb_stream_ns
     raise ValueError(f"not a cross-bank route: {route!r}")
 
 
@@ -71,6 +84,8 @@ def transit_energy_per_row(route: str) -> float:
         return 2 * E_GROUP_TRANSIT_ROW
     if route == "device":
         return E_CHANNEL_TRANSIT_ROW + E_GROUP_TRANSIT_ROW
+    if route == "fleet":
+        return 2 * E_CHANNEL_TRANSIT_ROW + E_GROUP_TRANSIT_ROW
     raise ValueError(f"not a cross-bank route: {route!r}")
 
 

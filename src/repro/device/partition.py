@@ -91,13 +91,15 @@ def _block_weights_ir(g: TaskGraph, geom: DeviceGeometry) -> list[float]:
 
 
 def _spread_bank_order(geom: DeviceGeometry) -> list[int]:
-    """Banks ordered so consecutive picks land on different channels/groups."""
+    """Banks ordered so consecutive picks land on different devices/channels."""
     by_pos: list[int] = []
     for pos in range(geom.banks_per_group):
         for g in range(geom.bank_groups_per_channel):
             for ch in range(geom.channels):
-                by_pos.append(ch * geom.banks_per_channel
-                              + g * geom.banks_per_group + pos)
+                for dev in range(geom.devices):
+                    by_pos.append((dev * geom.channels + ch)
+                                  * geom.banks_per_channel
+                                  + g * geom.banks_per_group + pos)
     return by_pos
 
 

@@ -147,9 +147,10 @@ def schedule(tasks_in: Iterable[Task], mode: Interconnect,
 
     def lisa_span_hold(bank: Bank, lo: int, hi: int, start: float,
                        end: float) -> float:
-        s = 0.0
+        # start is already >= every pe_free in the span (the caller floors
+        # at lisa_span_start), so each PE's hold equals the full span
+        s = (hi - lo + 1) * (end - start)
         for p in range(lo, hi + 1):
-            s += end - max(start, bank.pe_free[p])
             bank.pe_free[p] = end
         return s
 

@@ -12,6 +12,8 @@ Token layout (``n`` = PEs per bank, ``stride = 3n + 1`` per bank)::
               rx shared row p -> b*stride + 2n + 1 + p
     group bus g    -> n_banks*stride + g
     channel bus c  -> n_banks*stride + n_groups + c
+    d2d link v     -> n_banks*stride + n_groups + n_channels + v
+                      (fleet geometries only: one off-package link per device)
 
 Intra-bank moves compile to the exact single-bank segments of
 :class:`~repro.core.engine.BankModel`, just offset into the owning bank's
@@ -74,9 +76,23 @@ class DeviceModel(engine.ResourceModel):
     def _chan_bus(self, c: int) -> int:
         return self.geom.n_banks * self._stride + self.geom.n_groups + c
 
-    def n_resources(self) -> int:
+    def _d2d_link(self, v: int) -> int:
         return self.geom.n_banks * self._stride + self.geom.n_groups \
-            + self.geom.channels
+            + self.geom.n_channels + v
+
+    def n_resources(self) -> int:
+        geom = self.geom
+        # single-device geometries carry no off-package links, keeping the
+        # token layout (and every golden schedule) byte-identical to the
+        # pre-fleet model
+        d2d = geom.devices if geom.devices > 1 else 0
+        return geom.n_banks * self._stride + geom.n_groups \
+            + geom.n_channels + d2d
+
+    def bus_classes(self) -> tuple[str, ...]:
+        if self.geom.devices > 1:
+            return ("bank_group", "channel", "d2d")
+        return ("bank_group", "channel")
 
     def refresh_units(self) -> tuple[tuple[int, ...], ...]:
         """One refresh unit per bank: its PEs, BK-bus and shared rows.
@@ -100,7 +116,9 @@ class DeviceModel(engine.ResourceModel):
             names.extend(f"bank{b}/tx{p}" for p in range(n))
             names.extend(f"bank{b}/rx{p}" for p in range(n))
         names.extend(f"group-bus{g}" for g in range(geom.n_groups))
-        names.extend(f"chan-bus{c}" for c in range(geom.channels))
+        names.extend(f"chan-bus{c}" for c in range(geom.n_channels))
+        if geom.devices > 1:
+            names.extend(f"d2d-link{v}" for v in range(geom.devices))
         return tuple(names)
 
     def refresh_unit_names(self) -> tuple[str, ...]:
@@ -143,10 +161,13 @@ class DeviceModel(engine.ResourceModel):
         dsts_local = [geom.local_of(d) for d in group]
         route = geom.route(src_bank, dst_bank)
         p = self._plan(gsrc, group[0])
-        gbuses, cbuses = _transit_resources(geom, src_bank, dst_bank, route)
+        gbuses, cbuses, dlinks = _transit_resources(geom, src_bank, dst_bank,
+                                                    route)
         bus_rids = tuple([self._group_bus(g) for g in gbuses]
-                         + [self._chan_bus(c) for c in cbuses])
-        busy_keys = ("bank_group",) * len(gbuses) + ("channel",) * len(cbuses)
+                         + [self._chan_bus(c) for c in cbuses]
+                         + [self._d2d_link(v) for v in dlinks])
+        busy_keys = ("bank_group",) * len(gbuses) \
+            + ("channel",) * len(cbuses) + ("d2d",) * len(dlinks)
         # fan-out from the bank port to every destination in the bank rides
         # the intra-bank interconnect
         fill = move_latency(self.mode, 0, dsts_local, rows)
@@ -253,9 +274,7 @@ class DeviceModel(engine.ResourceModel):
             n_cross += hit[3]
             for route, n in hit[4]:
                 rows_by_route[route] = rows_by_route.get(route, 0) + n
-        n_resources = geom.n_banks * self._stride + geom.n_groups \
-            + geom.channels
-        return Compiled(n_resources, exec_plan, prio,
+        return Compiled(self.n_resources(), exec_plan, prio,
                         n_ops=g.n - len(move_idx), n_moves=len(move_idx),
                         n_rows=n_rows, n_cross=n_cross,
                         rows_by_route=rows_by_route)
@@ -302,13 +321,18 @@ class DeviceModel(engine.ResourceModel):
         return hit
 
 
-def _transit_resources(geom: DeviceGeometry, src_bank: int, dst_bank: int,
-                       route: str) -> tuple[list[int], list[int]]:
-    """(group-bus indices, channel-bus indices) held by the transit leg."""
+def _transit_resources(
+        geom: DeviceGeometry, src_bank: int, dst_bank: int,
+        route: str) -> tuple[list[int], list[int], list[int]]:
+    """(group-bus, channel-bus, d2d-link indices) held by the transit leg."""
     sg, dg = geom.group_of_bank(src_bank), geom.group_of_bank(dst_bank)
     sc, dc = geom.channel_of_bank(src_bank), geom.channel_of_bank(dst_bank)
     if route == "group":
-        return [sg], []
+        return [sg], [], []
     if route == "channel":
-        return [sg, dg], [sc]
-    return [sg, dg], [sc, dc]          # "device"
+        return [sg, dg], [sc], []
+    if route == "device":
+        return [sg, dg], [sc, dc], []
+    # "fleet": both devices' channel I/O plus their off-package links
+    return [sg, dg], [sc, dc], [geom.device_of_bank(src_bank),
+                                geom.device_of_bank(dst_bank)]

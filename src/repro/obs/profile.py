@@ -37,6 +37,11 @@ class AdvanceSample:
     heap_pushes: int
     token_probes: int        # token free-time reads while placing claims
     refresh_windows: int
+    # fast-path counters (zero under the scalar differential engine):
+    batches: int = 0         # vectorized frontier groups dispatched
+    batched_tasks: int = 0   # tasks executed inside those groups
+    vector_probes: int = 0   # token probes served by vectorized gathers
+    heap_ops_avoided: int = 0  # pushes replaced by bulk frontier appends
 
     @property
     def events_per_sec(self) -> float:
@@ -53,10 +58,15 @@ class EngineProfile:
         self.samples.append(sample)
 
     def record_advance(self, *, wall_s: float, n_exec: int, heap_pushes: int,
-                       token_probes: int, refresh_windows: int) -> None:
+                       token_probes: int, refresh_windows: int,
+                       batches: int = 0, batched_tasks: int = 0,
+                       vector_probes: int = 0,
+                       heap_ops_avoided: int = 0) -> None:
         """Engine-facing hook: one sample per ``advance`` call."""
         self.samples.append(AdvanceSample(wall_s, n_exec, heap_pushes,
-                                          token_probes, refresh_windows))
+                                          token_probes, refresh_windows,
+                                          batches, batched_tasks,
+                                          vector_probes, heap_ops_avoided))
 
     # --- aggregates -------------------------------------------------------------
 
@@ -91,4 +101,14 @@ class EngineProfile:
             "token_probes_per_task": (
                 sum(s.token_probes for s in self.samples) / n if n else 0.0),
             "refresh_windows": sum(s.refresh_windows for s in self.samples),
+            "batched_dispatches": sum(s.batches for s in self.samples),
+            "batched_tasks": sum(s.batched_tasks for s in self.samples),
+            "batched_frac": (
+                sum(s.batched_tasks for s in self.samples) / n if n else 0.0),
+            "mean_batch_size": (
+                sum(s.batched_tasks for s in self.samples)
+                / max(1, sum(s.batches for s in self.samples))),
+            "vector_probes": sum(s.vector_probes for s in self.samples),
+            "heap_ops_avoided": sum(s.heap_ops_avoided
+                                    for s in self.samples),
         }

@@ -1,0 +1,409 @@
+"""Vectorized engine vs the scalar differential oracle, bit for bit.
+
+The session default (``engine="vector"``) batches independent ready-frontier
+tasks and executes them with NumPy gathers; the scalar loop is kept as the
+oracle.  Equivalence here is *exact* — every stat field including the float
+accumulators must match to the last bit, under refresh, horizons,
+mid-flight admits, and early completion stops — because the batch formation
+rules are designed as equivalence conditions, not approximations.
+
+Also pins the satellites that ride on the same hot path:
+
+* stall accounting totals (the ``cnt * span`` subtotal form);
+* :class:`~repro.obs.profile.EngineProfile` fast-path counters;
+* HBM-scale :class:`~repro.device.DeviceGeometry` edge cases (single bank
+  per group, asymmetric channel counts, validation error messages that
+  name the offending dimension).
+"""
+
+import random
+
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+
+from repro.core import engine, ir, taskgraph
+from repro.core.engine import BankModel, EngineSession, RefreshSpec
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+from repro.device import DeviceGeometry
+from repro.device.partition import build_partitioned_ir
+from repro.device.resources import DeviceModel
+from repro.obs.profile import EngineProfile
+
+STAT_FIELDS = ("makespan_ns", "op_busy_ns", "move_busy_ns", "stall_ns",
+               "n_ops", "n_moves", "n_rows_moved", "n_cross_moves",
+               "energy_j", "rows_by_route", "bus_busy_ns", "finish_times",
+               "refresh_ns", "n_refresh_windows")
+
+GEOM = DeviceGeometry(channels=2, banks_per_channel=2)
+FLEET = DeviceGeometry(channels=2, banks_per_channel=4,
+                       bank_groups_per_channel=2, pes_per_bank=4, devices=2)
+
+
+def assert_same_stats(got, want):
+    for f in STAT_FIELDS:
+        assert getattr(got, f) == getattr(want, f), f
+
+
+def run_both(model_factory, drive):
+    """Run ``drive(session)`` on a vector and a scalar session; return stats."""
+    out = []
+    for eng in ("vector", "scalar"):
+        s = EngineSession(model_factory(), engine=eng)
+        drive(s)
+        out.append(s.stats())
+    return out
+
+
+@st.composite
+def random_bank_dag(draw):
+    n = draw(st.integers(2, 30))
+    tasks = []
+    for i in range(n):
+        deps = tuple(d for d in range(max(0, i - 4), i)
+                     if draw(st.booleans()))
+        if draw(st.booleans()):
+            tasks.append(Task(i, "op", deps=deps,
+                              pe=draw(st.integers(0, 15)),
+                              duration=draw(st.floats(1.0, 1e4))))
+        else:
+            src = draw(st.integers(0, 15))
+            dst = draw(st.integers(0, 15).filter(lambda d: d != src))
+            tasks.append(Task(i, "move", deps=deps, src=src, dst=dst,
+                              rows=draw(st.integers(1, 8))))
+    return tasks
+
+
+def seeded_bank_dag(rng, n):
+    """Deterministic analogue of :func:`random_bank_dag` (no hypothesis)."""
+    tasks = []
+    for i in range(n):
+        deps = tuple(d for d in range(max(0, i - 4), i)
+                     if rng.random() < 0.5)
+        if rng.random() < 0.5:
+            tasks.append(Task(i, "op", deps=deps, pe=rng.randrange(16),
+                              duration=rng.uniform(1.0, 1e4)))
+        else:
+            src = rng.randrange(16)
+            dst = rng.choice([d for d in range(16) if d != src])
+            tasks.append(Task(i, "move", deps=deps, src=src, dst=dst,
+                              rows=rng.randint(1, 8)))
+    return tasks
+
+
+class TestSeededDifferential:
+    """Always-on randomized oracle sweep (hypothesis-free)."""
+
+    @pytest.mark.parametrize("seed", range(12))
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_refresh_horizons_midflight(self, seed, mode):
+        rng = random.Random(1000 * seed + 7)
+        g1 = ir.from_tasks(seeded_bank_dag(rng, rng.randint(2, 40)))
+        g2 = ir.from_tasks(seeded_bank_dag(rng, rng.randint(2, 40)))
+        at = rng.uniform(1.0, 5e4)
+        spec = RefreshSpec(interval_ns=rng.uniform(500.0, 9000.0),
+                           duration_ns=50.0,
+                           stagger=bool(seed % 2)) if seed % 3 else None
+
+        def drive(s):
+            s.admit(g1)
+            s.advance(until=at)
+            s.admit(g2, at=at)
+            horizon = at
+            while s.n_pending_tasks:
+                horizon *= 1.7
+                s.advance(until=horizon)
+            s.advance()
+
+        out = []
+        for eng in ("vector", "scalar"):
+            s = EngineSession(BankModel(mode), refresh=spec, engine=eng)
+            drive(s)
+            out.append(s.stats())
+        assert_same_stats(out[0], out[1])
+
+
+class TestVectorEqualsScalar:
+    """Differential properties: identical call sequence, identical stats."""
+
+    @hypothesis.given(random_bank_dag(), st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_one_shot(self, tasks, mode):
+        g = ir.from_tasks(tasks)
+        v = engine.run(g, BankModel(mode), engine="vector")
+        s = engine.run(g, BankModel(mode), engine="scalar")
+        assert_same_stats(v, s)
+
+    @hypothesis.given(random_bank_dag(), st.sampled_from(list(Interconnect)),
+                      st.floats(500.0, 9000.0), st.booleans())
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_refresh_and_horizons(self, tasks, mode, interval, stagger):
+        g = ir.from_tasks(tasks)
+        spec = RefreshSpec(interval_ns=interval, duration_ns=interval / 10.0,
+                           stagger=stagger)
+
+        def drive(s):
+            s.admit(g)
+            horizon = interval / 3.0
+            while s.n_pending_tasks:
+                s.advance(until=horizon)
+                horizon *= 2.0
+            s.advance()
+
+        v, sc = run_both(lambda: BankModel(mode), drive)
+        assert_same_stats(v, sc)           # horizons, no refresh
+        for eng in ("vector", "scalar"):
+            s = EngineSession(BankModel(mode), refresh=spec, engine=eng)
+            drive(s)
+            if eng == "vector":
+                v = s.stats()
+            else:
+                sc = s.stats()
+        assert_same_stats(v, sc)
+
+    @hypothesis.given(random_bank_dag(), random_bank_dag(),
+                      st.sampled_from(list(Interconnect)),
+                      st.floats(1.0, 5e4))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_midflight_admit(self, t1, t2, mode, at):
+        g1, g2 = ir.from_tasks(t1), ir.from_tasks(t2)
+
+        def drive(s):
+            s.admit(g1)
+            s.advance(until=at)
+            s.admit(g2, at=at)
+            s.advance()
+
+        v, sc = run_both(lambda: BankModel(mode), drive)
+        assert_same_stats(v, sc)
+
+    @hypothesis.given(random_bank_dag(), random_bank_dag(),
+                      st.sampled_from(list(Interconnect)))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_stop_on_completion(self, t1, t2, mode):
+        g1, g2 = ir.from_tasks(t1), ir.from_tasks(t2)
+        orders = []
+
+        def drive(s):
+            s.admit(g1)
+            s.admit(g2)
+            order = []
+            while s.n_pending_tasks:
+                order.extend(s.advance(stop_on_completion=True))
+            orders.append(order)
+
+        v, sc = run_both(lambda: BankModel(mode), drive)
+        assert_same_stats(v, sc)
+        assert orders[0] == orders[1]     # same completion order
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    @pytest.mark.parametrize("app,kw", [("pmm", dict(n=20)),
+                                        ("bfs", dict(n_nodes=40))])
+    def test_device_model_cross_bank(self, mode, app, kw):
+        # cross-bank moves compile to general multi-segment plans — the
+        # per-member path inside a batch
+        g = build_partitioned_ir(app, mode, GEOM, policy="round_robin", **kw)
+        v = engine.run(g, DeviceModel(mode, GEOM), engine="vector")
+        s = engine.run(g, DeviceModel(mode, GEOM), engine="scalar")
+        assert_same_stats(v, s)
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_fleet_model_cross_device(self, mode):
+        g = build_partitioned_ir("pmm", mode, FLEET, policy="round_robin",
+                                 n=24)
+        v = engine.run(g, DeviceModel(mode, FLEET), engine="vector")
+        s = engine.run(g, DeviceModel(mode, FLEET), engine="scalar")
+        assert_same_stats(v, s)
+        assert v.rows_by_route.get("fleet", 0) > 0
+        assert "d2d" in v.bus_busy_ns
+
+    def test_engine_name_validated(self):
+        with pytest.raises(ValueError, match="engine"):
+            EngineSession(BankModel(Interconnect.LISA), engine="simd")
+
+
+# --- satellite: stall accounting totals ------------------------------------------
+
+
+class TestStallTotals:
+    """The span-subtotal form: ``stall += stalled_pes * span``, exactly."""
+
+    def test_single_lisa_move_stall_is_span_times_pes(self):
+        # move 0 -> 5 claims PEs [0, 5]: 6 stalled PEs for the whole span
+        tasks = [Task(0, "move", src=0, dst=5, rows=4)]
+        r = engine.run(ir.from_tasks(tasks), BankModel(Interconnect.LISA))
+        assert r.stall_ns == 6 * r.makespan_ns
+
+    def test_chained_moves_accumulate_exact_subtotals(self):
+        tasks = [Task(0, "move", src=0, dst=3, rows=2),
+                 Task(1, "move", deps=(0,), src=2, dst=7, rows=3)]
+        r = engine.run(ir.from_tasks(tasks), BankModel(Interconnect.LISA))
+        ft = r.finish_times
+        span0 = ft[0]
+        span1 = ft[1] - ft[0]
+        assert r.stall_ns == 4 * span0 + 6 * span1
+
+    def test_sharedpim_moves_never_stall(self):
+        tasks = [Task(0, "move", src=0, dst=5, rows=4)]
+        r = engine.run(ir.from_tasks(tasks),
+                       BankModel(Interconnect.SHARED_PIM))
+        assert r.stall_ns == 0.0
+
+
+# --- satellite: profile fast-path counters ---------------------------------------
+
+
+def wide_graph(width=64, depth=4, tokens=16):
+    """Independent per-PE chains: maximally batchable frontier."""
+    tasks = []
+    uid = 0
+    for w in range(width):
+        prev = None
+        for d in range(depth):
+            deps = (prev,) if prev is not None else ()
+            tasks.append(Task(uid, "op", deps=deps, pe=w % tokens,
+                              duration=10.0 + w))
+            prev = uid
+            uid += 1
+    return ir.from_tasks(tasks)
+
+
+class TestFastPathCounters:
+    def test_vector_session_reports_batches(self):
+        # wide enough that batches exceed SCALAR_K and take the
+        # vectorized dispatch path (narrower frontiers legitimately
+        # execute member-by-member and record no vector probes)
+        geom = DeviceGeometry(channels=4, banks_per_channel=4,
+                              pes_per_bank=16)
+        prof = EngineProfile()
+        s = EngineSession(DeviceModel(Interconnect.LISA, geom),
+                          profile=prof)
+        s.admit(wide_graph(width=256, tokens=256))
+        s.advance()
+        summ = prof.summary()
+        assert summ["n_exec"] == 256 * 4
+        assert summ["batched_dispatches"] > 0
+        assert summ["batched_tasks"] > 0
+        assert summ["mean_batch_size"] > 1.0
+        assert summ["vector_probes"] > 0
+        assert 0.0 < summ["batched_frac"] <= 1.0
+
+    def test_scalar_session_reports_zero_fast_path(self):
+        prof = EngineProfile()
+        s = EngineSession(BankModel(Interconnect.LISA), profile=prof,
+                          engine="scalar")
+        s.admit(wide_graph())
+        s.advance()
+        summ = prof.summary()
+        assert summ["n_exec"] == 64 * 4
+        assert summ["batched_dispatches"] == 0
+        assert summ["batched_tasks"] == 0
+        assert summ["vector_probes"] == 0
+        assert summ["heap_ops_avoided"] == 0
+
+    def test_probe_counts_match_between_engines(self):
+        out = {}
+        for eng in ("vector", "scalar"):
+            prof = EngineProfile()
+            s = EngineSession(BankModel(Interconnect.SHARED_PIM),
+                              profile=prof, engine=eng)
+            s.admit(wide_graph())
+            s.advance()
+            out[eng] = prof.summary()
+        for k in ("n_exec", "heap_pushes", "heap_pops", "token_probes"):
+            assert out["vector"][k] == out["scalar"][k], k
+
+
+# --- satellite: HBM-scale geometry edge cases ------------------------------------
+
+
+HBM = DeviceGeometry(channels=16, banks_per_channel=16,
+                     bank_groups_per_channel=4, pes_per_bank=16)
+
+
+class TestHBMGeometry:
+    def test_hbm_shape_totals(self):
+        assert HBM.n_banks == 256
+        assert HBM.n_groups == 64
+        assert HBM.banks_per_group == 4
+        assert HBM.total_pes == 4096
+
+    def test_single_bank_per_group(self):
+        g = DeviceGeometry(channels=4, banks_per_channel=4,
+                           bank_groups_per_channel=4)
+        assert g.banks_per_group == 1
+        # no two distinct banks share a group: "group" route unreachable
+        routes = {g.route(a, b) for a in range(g.n_banks)
+                  for b in range(g.n_banks) if a != b}
+        assert routes == {"channel", "device"}
+
+    def test_asymmetric_channel_counts(self):
+        # odd, non-power-of-two shapes must address cleanly end to end
+        g = DeviceGeometry(channels=3, banks_per_channel=10,
+                           bank_groups_per_channel=5, pes_per_bank=8)
+        assert g.n_banks == 30 and g.banks_per_group == 2
+        for b in range(g.n_banks):
+            assert g.channel_of_bank(b) == b // 10
+            assert g.bank_of(g.pe(b, 0)) == b
+        m = DeviceModel(Interconnect.SHARED_PIM, g)
+        assert len(m.token_names()) == m.n_resources()
+        assert len(m.refresh_units()) == g.n_banks
+
+    @pytest.mark.parametrize("field,bad", [
+        ("channels", 0), ("banks_per_channel", -1),
+        ("bank_groups_per_channel", 0), ("pes_per_bank", 0),
+        ("devices", 0), ("channels", 2.0),
+    ])
+    def test_validation_names_offending_dimension(self, field, bad):
+        kw = {field: bad}
+        with pytest.raises(ValueError, match=field):
+            DeviceGeometry(**kw)
+
+    def test_indivisible_groups_names_both_dimensions(self):
+        with pytest.raises(ValueError) as ei:
+            DeviceGeometry(banks_per_channel=10, bank_groups_per_channel=4)
+        msg = str(ei.value)
+        assert "banks_per_channel" in msg
+        assert "bank_groups_per_channel" in msg
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_hbm_schedule_vector_equals_scalar(self, mode):
+        g = build_partitioned_ir("pmm", mode, HBM, policy="round_robin",
+                                 n=32)
+        v = engine.run(g, DeviceModel(mode, HBM), engine="vector")
+        s = engine.run(g, DeviceModel(mode, HBM), engine="scalar")
+        assert_same_stats(v, s)
+
+
+# --- fleet tier: model-parallel placement across devices -------------------------
+
+
+class TestFleetLlama4:
+    """The workload frontend places a registry model across a device fleet."""
+
+    def test_llama4_spans_devices_and_sharedpim_wins(self):
+        import repro.frontend  # noqa: F401  (registers model apps)
+        geom = DeviceGeometry(channels=2, banks_per_channel=4,
+                              bank_groups_per_channel=2, pes_per_bank=8,
+                              devices=2)
+        results = {}
+        for mode in Interconnect:
+            g = build_partitioned_ir("llama4-maverick-400b-a17b", mode, geom,
+                                     policy="round_robin", phase="decode",
+                                     n_layers=2)
+            banks = {geom.bank_of(int(pe)) for pe in g.pe}
+            assert {geom.device_of_bank(b) for b in banks} == {0, 1}
+            results[mode] = engine.run(g, DeviceModel(mode, geom))
+        sp = results[Interconnect.SHARED_PIM]
+        li = results[Interconnect.LISA]
+        assert sp.rows_by_route.get("fleet", 0) > 0
+        assert sp.bus_busy_ns["d2d"] > 0.0
+        assert sp.makespan_ns < li.makespan_ns
+
+    def test_single_device_has_no_fleet_accounting(self):
+        g = build_partitioned_ir("pmm", Interconnect.SHARED_PIM, GEOM,
+                                 policy="round_robin", n=20)
+        r = engine.run(g, DeviceModel(Interconnect.SHARED_PIM, GEOM))
+        assert "fleet" not in r.rows_by_route
+        assert "d2d" not in r.bus_busy_ns
