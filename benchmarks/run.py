@@ -31,6 +31,8 @@ _HEADLINES = {
                                       default=None)),
     "BENCH_obs": ("events_per_sec",
                   lambda d: d.get("events_per_sec")),
+    "BENCH_energy": ("sp_transfer_energy_advantage_min",
+                     lambda d: d.get("advantage_min")),
     "BENCH_engine": ("events_per_sec",
                      lambda d: d.get("events_per_sec")),
     "BENCH_passes": ("max_sp_gain_from_passes",

@@ -7,7 +7,10 @@ track per bank PE, BK-bus, tx/rx shared row, and bus.  Load a Shared-PIM
 trace next to its LISA twin at https://ui.perfetto.dev: the LISA PE
 tracks gap for every inter-bank span (circuit switching blocks the source
 and destination banks end to end), the Shared-PIM tracks keep computing
-while the rows drain/transit/fill through the shared-row tracks.
+while the rows drain/transit/fill through the shared-row tracks.  The
+``power`` process renders the same schedule as windowed watt counters —
+one track per bank and bus plus the device total — so the paper's
+transfer-energy claim shows up as a visibly lower, shorter power curve.
 
 Equivalent CLI: ``PYTHONPATH=src python -m repro.obs``.
 

@@ -59,6 +59,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import copy_models
+from repro.core import energy as energy_model
+from repro.core.energy import move_energy
 from repro.core.ir import OP, TaskGraph
 from repro.core.pluto import Interconnect
 
@@ -169,6 +171,14 @@ class Compiled:
     n_rows: int = 0         # rows x fan-out, summed over moves
     n_cross: int = 0        # moves with at least one off-bank destination
     rows_by_route: dict = dataclasses.field(default_factory=dict)
+    #: metered joules per task (ops at op_j, moves fully priced) — derived
+    #: accounting only, summed at admit time like the integer stats and
+    #: apportioned over claim windows by the obs layer; the event loops
+    #: never read it
+    task_energy_j: list = dataclasses.field(default_factory=list,
+                                            compare=False, repr=False)
+    energy_op_j: float = 0.0    # sum of op entries in task_energy_j
+    energy_move_j: float = 0.0  # sum of move entries in task_energy_j
     #: lazily-built structure-of-arrays view of ``exec_plan`` (token-id /
     #: CSR arrays), cached here by :mod:`repro.core.engine_vec`
     soa: object = dataclasses.field(default=None, compare=False, repr=False)
@@ -219,6 +229,24 @@ class ResourceModel:
         """
         return ("bank_group", "channel")
 
+    def energy_table(self) -> energy_model.EnergyTable:
+        """Per-op-class / per-hop price list used to meter this model.
+
+        Purely observational: compile() prices each task's joules from it
+        and sessions sum them at admit time — no scheduled float depends
+        on these values.  Both concrete models share the Table II prices.
+        """
+        return energy_model.DEFAULT_TABLE
+
+    def token_power_groups(self) -> tuple[str, ...]:
+        """Power-track group per token (one Perfetto counter track each).
+
+        Defaults to the token name's ``/``-prefix, which collapses a
+        device bank's ~50 tokens into one ``bankN`` track while each
+        group/channel/d2d bus keeps its own; single-bank models override.
+        """
+        return tuple(n.split("/")[0] for n in self.token_names())
+
 
 class BankModel(ResourceModel):
     """One DRAM bank: ``n_pes`` subarray PEs plus the intra-bank interconnect.
@@ -258,6 +286,10 @@ class BankModel(ResourceModel):
     def refresh_unit_names(self) -> tuple[str, ...]:
         return ("refresh/bank0",)
 
+    def token_power_groups(self) -> tuple[str, ...]:
+        # every token of a single-bank model draws from the same bank
+        return ("bank0",) * self.n_resources()
+
     def compile(self, g: TaskGraph) -> Compiled:
         n_pes = self.n_pes
         mode = self.mode
@@ -276,6 +308,9 @@ class BankModel(ResourceModel):
         # are overwritten below
         prio: list = g.duration.tolist()
         exec_plan: list = list(zip((g.pe % n_pes).tolist(), prio))
+        e_op = self.energy_table().op_j
+        task_energy: list = [e_op] * g.n
+        energy_move = 0.0
         move_idx = np.nonzero(g.kinds != OP)[0].tolist()
         n_rows = 0
         for i in move_idx:
@@ -302,14 +337,21 @@ class BankModel(ResourceModel):
                 hit = move_cache[key] = (
                     (rids, stall_counts, lat),
                     move_latency(mode, src[i], raw_dsts, r),
-                    r * len(dsts))
-            exec_plan[i], prio[i], n_del = hit
+                    r * len(dsts),
+                    move_energy(mode, s, dsts, r))
+            exec_plan[i], prio[i], n_del, me = hit
             n_rows += n_del
+            task_energy[i] = me
+            energy_move += me
         n_moves = len(move_idx)
+        n_ops = g.n - n_moves
         return Compiled(3 * n_pes + 1, exec_plan, prio,
-                        n_ops=g.n - n_moves, n_moves=n_moves, n_rows=n_rows,
+                        n_ops=n_ops, n_moves=n_moves, n_rows=n_rows,
                         n_cross=0,
-                        rows_by_route={"intra": n_rows} if n_moves else {})
+                        rows_by_route={"intra": n_rows} if n_moves else {},
+                        task_energy_j=task_energy,
+                        energy_op_j=n_ops * e_op,
+                        energy_move_j=energy_move)
 
 
 # --- vectorized levelized critical path -----------------------------------------
@@ -432,6 +474,20 @@ class EngineStats:
     refresh_ns: float = 0.0
     #: applied refresh windows (refresh_ns / duration_ns, counted exactly)
     n_refresh_windows: int = 0
+    # --- metered energy (derived accounting; never a schedule input) ---
+    #: joules of PE compute (n_ops x the model's per-op price)
+    op_energy_j: float = 0.0
+    #: joules of data movement, fully priced per move (drain + every
+    #: transit hop + fill delivery) — unlike ``energy_j``, which keeps the
+    #: legacy loop-accrued cross-segment subtotal the goldens pin
+    move_energy_j: float = 0.0
+    #: joules of refresh (applied windows x refresh_window_j)
+    refresh_energy_j: float = 0.0
+
+    @property
+    def total_energy_j(self) -> float:
+        """Everything metered: compute + movement + refresh."""
+        return self.op_energy_j + self.move_energy_j + self.refresh_energy_j
 
 
 @dataclasses.dataclass(frozen=True)
@@ -444,6 +500,10 @@ class JobRecord:
     n_tasks: int
     remaining: int          # unexecuted tasks (0 = complete)
     finish_ns: float        # max task finish so far; final when remaining==0
+    #: direct metered joules of this job's own tasks (compute + moves);
+    #: shared-bus and refresh energy are apportioned separately by
+    #: :func:`repro.obs.metrics.energy_attribution`
+    energy_j: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -536,6 +596,12 @@ class EngineSession:
         # integer statistics (order independent, summed at admit time)
         self._n_ops = self._n_moves = self._n_rows = self._n_cross = 0
         self._rows_by_route: dict = {}
+        # metered energy: like the integer stats it is order independent
+        # and schedule independent, so it accrues at admit time — the
+        # event loops never touch it (energy is derived, never steering)
+        self._op_energy = self._move_energy = 0.0
+        self._task_energy: list = []
+        self._job_energy: list = []
         self._rq: list = []          # (due_ns, unit, tokens) refresh heap
         if refresh is not None:
             units = model.refresh_units()
@@ -565,7 +631,7 @@ class EngineSession:
     def job(self, job: int) -> JobRecord:
         return JobRecord(job, self._job_admit[job], self._job_off[job],
                          self._job_n[job], self._job_rem[job],
-                         self._job_fin[job])
+                         self._job_fin[job], self._job_energy[job])
 
     # --- admission --------------------------------------------------------------
 
@@ -664,6 +730,20 @@ class EngineSession:
         for route, rows in comp.rows_by_route.items():
             self._rows_by_route[route] = \
                 self._rows_by_route.get(route, 0) + rows
+        # energy bookkeeping (admit-time, wall-clocked when profiling so
+        # the metering overhead is itself observable)
+        _e_wall0 = time.perf_counter() if self.profile is not None else 0.0
+        te = comp.task_energy_j
+        if len(te) != n:          # models that do not meter: charge zero
+            te = [0.0] * n
+        self._task_energy.extend(te)
+        self._op_energy += comp.energy_op_j
+        self._move_energy += comp.energy_move_j
+        self._job_energy.append(comp.energy_op_j + comp.energy_move_j)
+        if self.profile is not None:
+            self.profile.record_admit(
+                wall_s=time.perf_counter() - _e_wall0,
+                n_tasks=n, energy_entries=len(te))
         heap, neg_cp, guids = self._heap, self._neg_cp, self._guids
         if vec is not None:
             # the vectorized frontier is a sorted list, not a binary heap:
@@ -944,7 +1024,14 @@ class EngineSession:
             bus_busy_ns=self._bus_busy,
             finish_times=dict(zip(self._guids, finish)),
             refresh_ns=self._refresh_ns,
-            n_refresh_windows=self._n_refresh)
+            n_refresh_windows=self._n_refresh,
+            op_energy_j=self._op_energy,
+            move_energy_j=self._move_energy,
+            # one multiplication, not a loop accumulation: identical under
+            # the vectorized engine's refresh idle-gap collapse, which
+            # batches whole windows without touching per-window floats
+            refresh_energy_j=self._n_refresh
+            * self.model.energy_table().refresh_window_j)
 
 
 def run(g: TaskGraph, model: ResourceModel, *,

@@ -36,6 +36,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import engine
+from repro.core.energy import move_energy
 from repro.core.engine import CIRCUIT, SAF, Compiled, move_latency
 from repro.core.ir import OP, TaskGraph
 from repro.core.pluto import Interconnect
@@ -232,6 +233,9 @@ class DeviceModel(engine.ResourceModel):
         prio = g.duration.tolist()
         exec_plan: list = list(zip(
             ((gpe // ppb) * self._stride + gpe % ppb).tolist(), prio))
+        e_op = self.energy_table().op_j
+        task_energy: list = [e_op] * g.n
+        energy_move = 0.0
         move_idx = np.nonzero(g.kinds != OP)[0]
         n_rows = n_cross = 0
         rows_by_route: dict = {}
@@ -256,11 +260,13 @@ class DeviceModel(engine.ResourceModel):
                 for route, n in u[4]:
                     rows_by_route[route] = rows_by_route.get(route, 0) \
                         + n * cnt
+                energy_move += u[5] * cnt
             inv_l = inv.tolist()
             for j, i in enumerate(single.tolist()):
                 hit = hits[inv_l[j]]
                 exec_plan[i] = hit[0]
                 prio[i] = hit[1]
+                task_energy[i] = hit[5]
         for i in multi.tolist():
             raw_dsts = dst_flat[dst_indptr[i]:dst_indptr[i + 1]]
             key = (src[i], tuple(raw_dsts), rows_arr[i])
@@ -274,14 +280,26 @@ class DeviceModel(engine.ResourceModel):
             n_cross += hit[3]
             for route, n in hit[4]:
                 rows_by_route[route] = rows_by_route.get(route, 0) + n
+            task_energy[i] = hit[5]
+            energy_move += hit[5]
+        n_ops = g.n - len(move_idx)
         return Compiled(self.n_resources(), exec_plan, prio,
-                        n_ops=g.n - len(move_idx), n_moves=len(move_idx),
+                        n_ops=n_ops, n_moves=len(move_idx),
                         n_rows=n_rows, n_cross=n_cross,
-                        rows_by_route=rows_by_route)
+                        rows_by_route=rows_by_route,
+                        task_energy_j=task_energy,
+                        energy_op_j=n_ops * e_op,
+                        energy_move_j=energy_move)
 
     def _compile_move(self, raw_src: int, raw_dsts: list, r: int) -> tuple:
-        """(exec_tuple, priority_ns, rows_delivered, is_cross, route_rows)
-        for one move signature — memoized across graphs via _move_cache."""
+        """(exec_tuple, priority_ns, rows_delivered, is_cross, route_rows,
+        energy_j) for one move signature — memoized via _move_cache.
+
+        ``energy_j`` is the fully-metered price of the move: intra-bank
+        legs via :func:`move_energy` (the latency model's twin), cross-bank
+        legs as drain + transit per the interconnect plan plus the fill
+        delivery from the bank port over the intra-bank interconnect.
+        """
         key = (raw_src,
                raw_dsts[0] if len(raw_dsts) == 1 else tuple(raw_dsts), r)
         hit = self._move_cache.get(key)
@@ -303,6 +321,8 @@ class DeviceModel(engine.ResourceModel):
             # pre-flattened single-segment form (engine fast path)
             exec_t = (seg[1], seg[2], seg[3])
             route_rows = (("intra", r * len(gdsts)),)
+            e_move = move_energy(self.mode, gsrc % ppb,
+                                 [d % ppb for d in gdsts], r)
         else:
             exec_t = (tuple(
                 self._intra_segment(src_bank, gsrc % ppb,
@@ -314,10 +334,20 @@ class DeviceModel(engine.ResourceModel):
                 ("intra" if bank == src_bank
                  else geom.route(src_bank, bank), r * len(group))
                 for bank, group in split.items())
+            e_move = 0.0
+            for bank, group in split.items():
+                dsts_local = [d % ppb for d in group]
+                if bank == src_bank:
+                    e_move += move_energy(self.mode, gsrc % ppb,
+                                          dsts_local, r)
+                else:
+                    p = self._plan(gsrc, group[0])
+                    e_move += r * (p.drain_energy_j + p.transit_energy_j) \
+                        + move_energy(self.mode, 0, dsts_local, r)
         hit = self._move_cache[key] = (
             exec_t,
             self._priority_latency(gsrc, raw_src, raw_dsts, gdsts, r, split),
-            r * len(gdsts), cross, route_rows)
+            r * len(gdsts), cross, route_rows, e_move)
         return hit
 
 

@@ -7,15 +7,18 @@ schedules stay bit-for-bit):
 ``trace``    :class:`Recorder` — the engine appends raw claim/refresh/job
              events while it runs; export to Chrome trace-event JSON
              (one track per PE / bus / shared row / refresh unit, plus
-             job and lease tracks) loadable at https://ui.perfetto.dev,
-             with graph fingerprints, interconnect mode, and rewrite logs
-             as reproducible provenance
+             job, lease, and windowed power-counter tracks) loadable at
+             https://ui.perfetto.dev, with graph fingerprints,
+             interconnect mode, and rewrite logs as reproducible
+             provenance
 ``metrics``  :class:`MetricsRegistry` — counters / gauges / histograms
              for the serving and batch layers (queue depth, lease
-             occupancy, latency, SLO attainment, per-resource utilization)
+             occupancy, latency, SLO attainment, per-resource utilization,
+             per-job/per-tenant :func:`energy_attribution`)
 ``profile``  :class:`EngineProfile` — wall-clocks the event loop itself:
-             events/sec, heap ops, token free-time probes, the throughput
-             guard ``benchmarks/obs.py`` enforces
+             events/sec, heap ops, token free-time probes, admit-side
+             energy-metering cost, the throughput guard
+             ``benchmarks/obs.py`` enforces
 
 Quickstart (trace one sweep cell, view at ui.perfetto.dev)::
 
@@ -33,7 +36,9 @@ Quickstart (trace one sweep cell, view at ui.perfetto.dev)::
 """
 
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
-                               MetricsRegistry, slo_attainment, utilization)
-from repro.obs.profile import AdvanceSample, EngineProfile  # noqa: F401
+                               MetricsRegistry, energy_attribution,
+                               slo_attainment, utilization)
+from repro.obs.profile import (AdmitSample, AdvanceSample,  # noqa: F401
+                               EngineProfile)
 from repro.obs.trace import (Recorder, graph_fingerprint,  # noqa: F401
                              record_sweep, rewrite_log_metadata)

@@ -30,14 +30,14 @@ import numpy as np
 
 
 class Counter:
-    """Monotonic count."""
+    """Monotonic count (integer events or accumulated float quantities)."""
 
     __slots__ = ("value",)
 
     def __init__(self) -> None:
         self.value = 0
 
-    def inc(self, n: int = 1) -> None:
+    def inc(self, n: float = 1) -> None:
         if n < 0:
             raise ValueError(f"counters only go up; got inc({n})")
         self.value += n
@@ -94,15 +94,35 @@ class Histogram:
     def observe(self, value: float) -> None:
         self._values.append(value)
 
+    #: below this many samples a percentile is reported but flagged
+    #: unreliable — interpolating an empty or one-point series yields
+    #: either nothing or a constant, not a distribution statistic
+    MIN_RELIABLE_SAMPLES = 2
+
     @property
     def n(self) -> int:
         return len(self._values)
 
+    def percentile(self, p: float) -> tuple[float | None, bool]:
+        """``(value, reliable)`` — guarded against degenerate series.
+
+        An empty series returns ``(None, False)`` instead of raising or
+        producing NaN; a series below :data:`MIN_RELIABLE_SAMPLES` returns
+        its value with ``reliable=False`` so guards can skip rather than
+        assert on noise.
+        """
+        if not self._values:
+            return None, False
+        a = np.asarray(self._values, dtype=np.float64)
+        return (float(np.percentile(a, p)),
+                len(a) >= self.MIN_RELIABLE_SAMPLES)
+
     def summary(self, percentiles=(50.0, 95.0, 99.0)) -> dict:
         if not self._values:
-            return {"n": 0}
+            return {"n": 0, "reliable": False}
         a = np.asarray(self._values, dtype=np.float64)
-        out = {"n": len(a), "mean": float(a.mean()),
+        out = {"n": len(a), "reliable": len(a) >= self.MIN_RELIABLE_SAMPLES,
+               "mean": float(a.mean()),
                "min": float(a.min()), "max": float(a.max())}
         for p in percentiles:
             out[f"p{p:g}"] = float(np.percentile(a, p))
@@ -204,6 +224,69 @@ def utilization(recorder, *, span_ns: float | None = None) -> dict[str, float]:
     runit_names = model.refresh_unit_names()
     for unit, b in sorted(refresh_busy.items()):
         out[runit_names[unit]] = b / span
+    return out
+
+
+def energy_attribution(recorder, *, job_tenants: dict | None = None) -> dict:
+    """Per-job (and optionally per-tenant) joules from a recorded session.
+
+    Direct energy — compute ops and moves, including every shared-bus hop
+    a move's price already folds in — is charged to the job that executed
+    the task (the job occupying the bus window, since claim segments give
+    each window exactly one owner).  Refresh energy is background: each
+    applied tRFC window's joules are split equally among the jobs live at
+    the window's start (admitted, not yet finished); windows with no live
+    job accrue to ``unattributed_j``.
+
+    Returns ``{"per_job_j", "refresh_j", "unattributed_j", "total_j"}``
+    plus ``"per_tenant_j"`` when ``job_tenants`` maps job ids to tenant
+    names (jobs absent from the map roll up under ``"-"``).  Totals
+    reconcile: executed direct energy + refresh == ``total_j``.
+    """
+    s = recorder._session
+    if s is None:
+        raise ValueError("recorder was never attached to a session")
+    task_energy = s._task_energy
+    job_of = s._job_of
+    per_job: dict[int, float] = {}
+    # ops and single-segment moves record into _tasks; multi-segment moves
+    # record one row per (segment, leg) into _segs — dedupe on position
+    for pos, _t0, _t1 in recorder._tasks:
+        j = job_of[pos]
+        per_job[j] = per_job.get(j, 0.0) + task_energy[pos]
+    for pos in {seg[0] for seg in recorder._segs}:
+        j = job_of[pos]
+        per_job[j] = per_job.get(j, 0.0) + task_energy[pos]
+    # refresh windows, split across the jobs live at window start
+    e_window = s.model.energy_table().refresh_window_j
+    refresh_j = unattributed = 0.0
+    if recorder._refresh:
+        admits = s._job_admit
+        fins = s._job_fin
+        rem = s._job_rem
+        n_jobs = len(admits)
+        for _unit, t0, _t1 in recorder._refresh:
+            live = [j for j in range(n_jobs)
+                    if admits[j] <= t0 and (rem[j] or fins[j] >= t0)]
+            refresh_j += e_window
+            if not live:
+                unattributed += e_window
+                continue
+            share = e_window / len(live)
+            for j in live:
+                per_job[j] = per_job.get(j, 0.0) + share
+    out = {
+        "per_job_j": {j: e for j, e in sorted(per_job.items())},
+        "refresh_j": refresh_j,
+        "unattributed_j": unattributed,
+        "total_j": sum(per_job.values()) + unattributed,
+    }
+    if job_tenants is not None:
+        per_tenant: dict[str, float] = {}
+        for j, e in per_job.items():
+            t = job_tenants.get(j, "-")
+            per_tenant[t] = per_tenant.get(t, 0.0) + e
+        out["per_tenant_j"] = dict(sorted(per_tenant.items()))
     return out
 
 

@@ -48,14 +48,36 @@ class AdvanceSample:
         return self.n_exec / self.wall_s if self.wall_s > 0.0 else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmitSample:
+    """One profiled ``admit``'s energy-bookkeeping cost.
+
+    Energy accrues at admit time (it is schedule independent), so its
+    entire metering overhead is admit-side — these samples make that cost
+    observable and let ``benchmarks/obs.py`` keep asserting the
+    recorded-vs-plain overhead bound with metering enabled.
+    """
+
+    wall_s: float            # time spent on energy bookkeeping alone
+    n_tasks: int
+    energy_entries: int      # per-task energy values appended
+
+
 class EngineProfile:
     """Accumulates per-advance samples for one session (see module doc)."""
 
     def __init__(self) -> None:
         self.samples: list[AdvanceSample] = []
+        self.admit_samples: list[AdmitSample] = []
 
     def add(self, sample: AdvanceSample) -> None:
         self.samples.append(sample)
+
+    def record_admit(self, *, wall_s: float, n_tasks: int,
+                     energy_entries: int) -> None:
+        """Engine-facing hook: energy-accounting cost of one ``admit``."""
+        self.admit_samples.append(AdmitSample(wall_s, n_tasks,
+                                              energy_entries))
 
     def record_advance(self, *, wall_s: float, n_exec: int, heap_pushes: int,
                        token_probes: int, refresh_windows: int,
@@ -111,4 +133,9 @@ class EngineProfile:
             "vector_probes": sum(s.vector_probes for s in self.samples),
             "heap_ops_avoided": sum(s.heap_ops_avoided
                                     for s in self.samples),
+            "n_admits": len(self.admit_samples),
+            "admit_energy_wall_s": sum(s.wall_s
+                                       for s in self.admit_samples),
+            "energy_entries": sum(s.energy_entries
+                                  for s in self.admit_samples),
         }

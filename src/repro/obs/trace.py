@@ -114,15 +114,141 @@ class Recorder:
     def queue_depth(self, t_ns: float, depth: int) -> None:
         self._queue_depth.append((t_ns, depth))
 
+    # --- power timelines --------------------------------------------------------
+
+    def power_series(self, *, windows: int = 120,
+                     window_ns: float | None = None) -> dict:
+        """Windowed instantaneous power per bank/bus group, plus the total.
+
+        Each executed task's metered joules (the session's admit-time
+        ``_task_energy``) are apportioned over its recorded claim windows
+        — multi-segment moves by each segment's token-ns share, so a
+        Shared-PIM transit leg's energy lands on the bus tracks during the
+        transit window — and refresh windows charge the bank they refresh.
+        The deposits are then integrated into ``windows`` equal time bins
+        (or bins of ``window_ns`` when given) and converted to watts.
+
+        Returns ``{"window_ns", "n_windows", "groups": {name: [W, ...]},
+        "total_w": [W, ...]}`` with only groups that drew any energy; the
+        derivation is pure arithmetic over recorded data, so it is
+        deterministic and byte-stable in the exported trace.
+        """
+        s = self._session
+        if s is None:
+            raise ValueError("recorder was never attached to a session")
+        model = s.model
+        exec_plan = s._exec_plan
+        task_energy = s._task_energy
+        gnames: list[str] = []
+        gidx: dict[str, int] = {}
+
+        def _gid(name: str) -> int:
+            i = gidx.get(name)
+            if i is None:
+                i = gidx[name] = len(gnames)
+                gnames.append(name)
+            return i
+
+        tok_g = [_gid(g) for g in model.token_power_groups()]
+        runit_g = [_gid(n.split("/", 1)[1] if n.startswith("refresh/")
+                        else n)
+                   for n in model.refresh_unit_names()]
+
+        # deposits: (group, t0, t1, joules)
+        deposits: list[tuple[int, float, float, float]] = []
+        t_end = 0.0
+        for pos, t0, t1 in self._tasks:
+            p = exec_plan[pos]
+            e = task_energy[pos]
+            if len(p) == 2:
+                deposits.append((tok_g[p[0]], t0, t1, e))
+            else:
+                share = e / len(p[0])
+                for rid in p[0]:
+                    deposits.append((tok_g[rid], t0, t1, share))
+            if t1 > t_end:
+                t_end = t1
+        # multi-segment moves: split the move's energy across its recorded
+        # claim windows by token-ns weight, then equally across each
+        # window's tokens (transit legs thereby charge the buses they hold)
+        from repro.core.engine import CIRCUIT
+        by_pos: dict[int, list] = {}
+        for row in self._segs:
+            by_pos.setdefault(row[0], []).append(row)
+        for pos, rows in by_pos.items():
+            e = task_energy[pos]
+            rids_of = []
+            weights = []
+            for _pos, k, leg, t0, t1 in rows:
+                seg = exec_plan[pos][0][k]
+                rids = seg[1] if seg[0] == CIRCUIT else seg[1 + leg]
+                rids_of.append(rids)
+                weights.append((t1 - t0) * len(rids))
+                if t1 > t_end:
+                    t_end = t1
+            wsum = sum(weights)
+            for (_pos, _k, _leg, t0, t1), rids, w in zip(rows, rids_of,
+                                                         weights):
+                ew = e * (w / wsum) if wsum > 0.0 else e / len(rows)
+                share = ew / len(rids)
+                for rid in rids:
+                    deposits.append((tok_g[rid], t0, t1, share))
+        e_window = model.energy_table().refresh_window_j
+        for unit, t0, t1 in self._refresh:
+            deposits.append((runit_g[unit], t0, t1, e_window))
+            if t1 > t_end:
+                t_end = t1
+
+        if not deposits or t_end <= 0.0:
+            return {"window_ns": 0.0, "n_windows": 0, "groups": {},
+                    "total_w": []}
+        wns = window_ns if window_ns is not None else t_end / windows
+        if wns <= 0.0:
+            raise ValueError(f"window_ns must be > 0, got {wns}")
+        n_bins = int(t_end / wns)
+        if n_bins * wns < t_end:
+            n_bins += 1
+        bins = [[0.0] * n_bins for _ in gnames]
+        last = n_bins - 1
+        for gi, t0, t1, e in deposits:
+            if t1 <= t0:
+                b = int(t0 / wns)
+                bins[gi][b if b < last else last] += e
+                continue
+            rate = e / (t1 - t0)
+            b = int(t0 / wns)
+            while t0 < t1 and b < n_bins:
+                bend = (b + 1) * wns
+                seg_end = t1 if t1 < bend else bend
+                bins[gi][b] += rate * (seg_end - t0)
+                t0 = seg_end
+                b += 1
+        to_w = 1e9 / wns    # J per window -> W
+        groups = {}
+        total = [0.0] * n_bins
+        for gi, name in enumerate(gnames):
+            series = bins[gi]
+            if not any(series):
+                continue
+            groups[name] = [v * to_w for v in series]
+            for b, v in enumerate(series):
+                total[b] += v * to_w
+        return {"window_ns": wns, "n_windows": n_bins, "groups": groups,
+                "total_w": total}
+
     # --- export -----------------------------------------------------------------
 
-    def chrome_trace(self, metadata: dict | None = None) -> dict:
+    def chrome_trace(self, metadata: dict | None = None, *,
+                     power_windows: int = 120) -> dict:
         """Expand the recorded schedule into a Chrome trace-event dict.
 
         Layout: pid 0 = engine resource tokens (one tid per token, named
         from the model's ``token_names``; refresh units follow on their own
         tids), pid 1 = jobs (one tid per admitted job), pid 2 = serving
-        (arrivals, queue-depth counter, one lease track per bank).
+        (arrivals, queue-depth counter, one lease track per bank), pid 3 =
+        power (one counter track per bank/bus group that drew energy, plus
+        the device total, from :meth:`power_series` with ``power_windows``
+        bins; ``power_windows=0`` disables the power tracks).
         """
         s = self._session
         if s is None:
@@ -194,6 +320,26 @@ class Recorder:
             for b in banks:
                 span(2, lease_tid[b], f"lease {who}", t0, t1, ticket=ticket)
 
+        # power counter tracks: one per bank/bus group + the device total
+        power_names: list[str] = []
+        if power_windows:
+            ps = self.power_series(windows=power_windows)
+            wns = ps["window_ns"]
+            for tid, (gname, series) in enumerate(
+                    sorted(ps["groups"].items())):
+                power_names.append(f"power/{gname}")
+                for b, w in enumerate(series):
+                    ev.append({"ph": "C", "pid": 3, "tid": tid,
+                               "name": "power", "ts": b * wns / 1e3,
+                               "args": {"W": w}})
+            if ps["total_w"]:
+                tid = len(power_names)
+                power_names.append("power/device-total")
+                for b, w in enumerate(ps["total_w"]):
+                    ev.append({"ph": "C", "pid": 3, "tid": tid,
+                               "name": "power", "ts": b * wns / 1e3,
+                               "args": {"W": w}})
+
         # canonical ordering: raw stores are appended in execution order,
         # which is deterministic, but sort anyway so the byte layout never
         # depends on which store an event came from
@@ -202,7 +348,8 @@ class Recorder:
 
         # track-name metadata (after the sort: metadata leads the file)
         meta_ev: list[dict] = []
-        for pid, pname in ((0, "engine"), (1, "jobs"), (2, "serving")):
+        for pid, pname in ((0, "engine"), (1, "jobs"), (2, "serving"),
+                           (3, "power")):
             meta_ev.append({"ph": "M", "pid": pid, "name": "process_name",
                             "args": {"name": pname}})
         for tid, name in enumerate(names):
@@ -223,6 +370,9 @@ class Recorder:
             meta_ev.append({"ph": "M", "pid": 2, "tid": lease_tid[b],
                             "name": "thread_name",
                             "args": {"name": f"lease/bank{b}"}})
+        for tid, name in enumerate(power_names):
+            meta_ev.append({"ph": "M", "pid": 3, "tid": tid,
+                            "name": "thread_name", "args": {"name": name}})
 
         other = {
             "interconnect": model.mode.value,
@@ -235,7 +385,8 @@ class Recorder:
         return {"traceEvents": meta_ev + ev, "displayTimeUnit": "ns",
                 "otherData": other}
 
-    def dump(self, path: str | Path, metadata: dict | None = None) -> Path:
+    def dump(self, path: str | Path, metadata: dict | None = None, *,
+             power_windows: int = 120) -> Path:
         """Write the Chrome trace as byte-deterministic JSON; returns path.
 
         ``sort_keys`` plus compact separators plus Python's canonical float
@@ -243,8 +394,9 @@ class Recorder:
         traces of the same configuration diff clean across runs and PRs.
         """
         path = Path(path)
-        blob = json.dumps(self.chrome_trace(metadata), sort_keys=True,
-                          separators=(",", ":"))
+        blob = json.dumps(self.chrome_trace(metadata,
+                                            power_windows=power_windows),
+                          sort_keys=True, separators=(",", ":"))
         path.write_text(blob)
         return path
 

@@ -8,6 +8,12 @@ trace next to the LISA trace of the same cell shows Fig. 1 as actual
 tracks: the Shared-PIM bank PEs keep their op spans flowing while rows
 drain through the tx/rx tracks, where the LISA trace shows the same PEs
 gapped for every inter-bank span.
+
+Each trace also carries the ``power`` process: one windowed counter track
+per bank and bus plus the device total, derived from the same claim
+windows the resource tracks render — the LISA trace burns more joules
+over a longer makespan, and the per-cell summary line prints both totals
+so the paper's 1.2x transfer-energy claim is visible next to its speedup.
 """
 
 from __future__ import annotations
@@ -40,23 +46,33 @@ def record_all(out_dir: Path, *, refresh: RefreshSpec | None = None,
     paths = []
     for name, (app, kw) in CELLS.items():
         makespans = {}
+        energies = {}
         for mode in Interconnect:
             cfg = SweepConfig.make(app, mode, geom, **kw)
             rec = record_sweep(cfg, refresh=refresh)
             stats = rec._session.stats()
             makespans[mode] = stats.makespan_ns
+            energies[mode] = stats.total_energy_j
+            power = rec.power_series()
+            peak_w = max(power["total_w"], default=0.0)
             path = out_dir / f"{name}.{mode.value}.trace.json"
             rec.dump(path, {"cell": name, "app": app, "kw": dict(kw),
                             "geometry": geom.describe(),
-                            "makespan_ns": stats.makespan_ns})
+                            "makespan_ns": stats.makespan_ns,
+                            "energy_j": stats.total_energy_j})
             paths.append(path)
             print(f"{name:12s} {mode.value:10s} "
                   f"makespan {stats.makespan_ns:10.1f} ns  "
+                  f"energy {stats.total_energy_j * 1e6:8.2f} uJ  "
+                  f"peak {peak_w:6.2f} W  "
                   f"{rec.n_events:6d} events  -> {path}")
         sp, li = (makespans[Interconnect.SHARED_PIM],
                   makespans[Interconnect.LISA])
-        print(f"{name:12s} shared-pim is {li / sp:.2f}x faster — compare "
-              f"the two traces' PE tracks to see why")
+        esp, eli = (energies[Interconnect.SHARED_PIM],
+                    energies[Interconnect.LISA])
+        print(f"{name:12s} shared-pim is {li / sp:.2f}x faster and spends "
+              f"{eli / esp:.2f}x less energy — compare the PE tracks and "
+              f"the power counters to see why")
     return paths
 
 
@@ -75,7 +91,8 @@ def main(argv=None) -> int:
                        refresh=RefreshSpec() if args.refresh else None)
     print(f"\n{len(paths)} traces in {out_dir}")
     print("open https://ui.perfetto.dev and drag a .trace.json in; "
-          "one track per bank PE / bus / shared row")
+          "one track per bank PE / bus / shared row, plus windowed "
+          "power counters per bank/bus under the 'power' process")
     return 0
 
 

@@ -52,6 +52,10 @@ class JobResult:
     finish_ns: float
     banks: tuple[int, ...]
     n_tasks: int
+    #: direct metered energy of this job's own tasks, in nanojoules
+    #: (compute + moves; refresh apportionment is a recorder-level view —
+    #: see :func:`repro.obs.metrics.energy_attribution`)
+    energy_nj: float = 0.0
 
     @property
     def latency_ns(self) -> float:
@@ -102,6 +106,10 @@ class ServingRuntime:
         self.rewrite_logs: dict = {}  # (app, kw, banks) -> RewriteLog
         self._graphs: dict = {}      # (app, kw, banks) -> materialized graph
         self._live: dict = {}        # engine job id -> (request, lease, at)
+        #: engine job id -> tenant name, for every job ever admitted —
+        #: the mapping :func:`repro.obs.metrics.energy_attribution` takes
+        #: to roll per-job joules up to tenants
+        self.job_tenants: dict = {}
 
     # --- job graphs -------------------------------------------------------------
 
@@ -168,7 +176,8 @@ class ServingRuntime:
                     result = JobResult(
                         req.tenant.name, req.tenant.app, req.seq,
                         req.arrival_ns, rec.admit_ns, rec.finish_ns,
-                        lease.banks, rec.n_tasks)
+                        lease.banks, rec.n_tasks,
+                        energy_nj=rec.energy_j * 1e9)
                     self.results.append(result)
                     if closed is not None:
                         nxt = closed.on_complete(req, rec.finish_ns)
@@ -211,6 +220,7 @@ class ServingRuntime:
         g = self._graph(req, lease.banks)
         jid = self.session.admit(g, at=at)
         self._live[jid] = (req, lease, at)
+        self.job_tenants[jid] = req.tenant.name
         if self.recorder is not None:
             self.recorder.lease_grant(lease.ticket, lease.banks, at,
                                       req.tenant.name)
@@ -229,6 +239,8 @@ class ServingRuntime:
         m.histogram("latency_ns").observe(result.latency_ns)
         m.histogram("queue_ns").observe(result.queue_ns)
         m.histogram(f"latency_ns/{result.tenant}").observe(result.latency_ns)
+        m.counter("energy_nj").inc(result.energy_nj)
+        m.counter(f"energy_nj/{result.tenant}").inc(result.energy_nj)
         self._observe_occupancy(t_ns)
 
     def export_trace(self, path, metadata: dict | None = None):
@@ -281,7 +293,7 @@ def summarize(results, *, percentiles=(50.0, 95.0, 99.0),
     if not results:
         return {"n_jobs": 0, "throughput_jps": 0.0, "latency_ns": {},
                 "mean_queue_ns": 0.0, "makespan_ns": 0.0,
-                "t_start_ns": 0.0, "t_end_ns": 0.0,
+                "t_start_ns": 0.0, "t_end_ns": 0.0, "energy_nj": 0.0,
                 "percentile_min_samples": min_samples, "per_tenant": {}}
     lat = np.asarray([r.latency_ns for r in results], dtype=np.float64)
     queue = np.asarray([r.queue_ns for r in results], dtype=np.float64)
@@ -289,8 +301,14 @@ def summarize(results, *, percentiles=(50.0, 95.0, 99.0),
     t1 = max(r.finish_ns for r in results)
     span = t1 - t0
     per_tenant: dict = {}
+    energy_tenant: dict = {}
+    total_nj = 0.0
     for r in results:
         per_tenant.setdefault(r.tenant, []).append(r.latency_ns)
+        # getattr default keeps pre-energy result rows summarizable
+        e = getattr(r, "energy_nj", 0.0)
+        energy_tenant[r.tenant] = energy_tenant.get(r.tenant, 0.0) + e
+        total_nj += e
     return {
         "n_jobs": len(results),
         "throughput_jps": len(results) / span * 1e9 if span > 0 else 0.0,
@@ -302,10 +320,12 @@ def summarize(results, *, percentiles=(50.0, 95.0, 99.0),
         "t_start_ns": t0,
         "t_end_ns": t1,
         "percentile_min_samples": min_samples,
+        "energy_nj": total_nj,
         "per_tenant": {
             name: {"n_jobs": len(ls),
                    "mean_ns": float(np.mean(ls)),
                    "p99_ns": float(np.percentile(np.asarray(ls), 99.0)),
-                   "p99_reliable": len(ls) >= min_samples}
+                   "p99_reliable": len(ls) >= min_samples,
+                   "energy_nj": energy_tenant[name]}
             for name, ls in sorted(per_tenant.items())},
     }

@@ -1,0 +1,287 @@
+"""Energy metering: constants, engine accrual, attribution, power tracks.
+
+Energy is derived accounting — priced per task at compile time, accrued at
+admit time, and never consulted by the scheduler — so every equality here
+is *exact* (``==``, not approx): vector vs scalar, recorded vs plain, and
+the refresh idle-gap collapse must all leave the metered joules
+bit-for-bit identical because none of them change what was admitted.
+"""
+
+import math
+
+import pytest
+
+from repro.core import copy_models, engine, ir, taskgraph
+from repro.core.energy import DEFAULT_TABLE, EnergyTable, move_energy
+from repro.core.engine import BankModel, EngineSession, RefreshSpec
+from repro.core.pluto import Interconnect
+from repro.core.scheduler import Task
+from repro.device import DeviceGeometry
+from repro.device.partition import build_partitioned_ir
+from repro.device.resources import DeviceModel
+from repro.obs.metrics import energy_attribution
+from repro.obs.trace import Recorder
+from repro.runtime import ServingRuntime, TenantSpec, open_loop_trace, summarize
+
+GEOM = DeviceGeometry(channels=1, banks_per_channel=4,
+                      bank_groups_per_channel=2)
+
+ENERGY_FIELDS = ("op_energy_j", "move_energy_j", "refresh_energy_j")
+
+
+def device_graph(mode, app="mm", **kw):
+    kw = kw or dict(n=16)
+    return build_partitioned_ir(app, mode, GEOM, **kw)
+
+
+class TestEnergyTable:
+    def test_paper_row_prices(self):
+        t = DEFAULT_TABLE
+        assert t.lisa_row_j == copy_models.lisa_copy(distance=1).energy_j
+        assert t.sp_row_j == copy_models.sharedpim_copy().energy_j
+        assert t.lisa_row_j / t.sp_row_j == pytest.approx(1.2, abs=0.02)
+
+    def test_per_bit_pj_positive(self):
+        per_bit = DEFAULT_TABLE.per_bit_pj()
+        assert per_bit and all(v > 0 for v in per_bit.values())
+
+    def test_move_energy_reproduces_copy_models(self):
+        assert move_energy(Interconnect.LISA, 0, [3], 2) == \
+            2 * copy_models.lisa_copy(distance=3).energy_j
+        assert move_energy(Interconnect.SHARED_PIM, 0, [3], 2) == \
+            2 * copy_models.sharedpim_copy().energy_j
+        assert move_energy(Interconnect.SHARED_PIM, 0, [1, 2, 3, 4], 1) == \
+            copy_models.sharedpim_broadcast(dests=(1, 2, 3, 4)).energy_j
+
+    def test_energy_table_frozen(self):
+        with pytest.raises(AttributeError):
+            DEFAULT_TABLE.op_j = 0.0
+        assert isinstance(DEFAULT_TABLE, EnergyTable)
+
+
+class TestEngineAccrual:
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_bank_session_meters(self, mode):
+        g = ir.from_tasks([
+            Task(0, "op", pe=0, duration=10.0),
+            Task(1, "move", deps=(0,), src=0, dst=5, rows=3),
+            Task(2, "op", deps=(1,), pe=5, duration=10.0),
+        ])
+        st = engine.run(g, BankModel(mode))
+        t = BankModel(mode).energy_table()
+        assert st.op_energy_j == 2 * t.op_j
+        assert st.move_energy_j == move_energy(mode, 0, [5], 3)
+        assert st.refresh_energy_j == 0.0
+        assert st.total_energy_j == st.op_energy_j + st.move_energy_j
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_sharedpim_moves_cost_less(self, mode):
+        # same graph through both interconnects: identical op joules,
+        # strictly cheaper Shared-PIM movement (the paper's 1.2x per row)
+        stats = {m: engine.run(device_graph(m), DeviceModel(m, GEOM))
+                 for m in Interconnect}
+        li, sp = stats[Interconnect.LISA], stats[Interconnect.SHARED_PIM]
+        assert li.op_energy_j == sp.op_energy_j > 0
+        assert li.move_energy_j > sp.move_energy_j > 0
+
+    def test_refresh_energy_counts_windows(self):
+        spec = RefreshSpec()
+        s = EngineSession(DeviceModel(Interconnect.SHARED_PIM, GEOM),
+                          refresh=spec)
+        s.admit(device_graph(Interconnect.SHARED_PIM))
+        s.advance()
+        st = s.stats()
+        table = s.model.energy_table()
+        assert st.n_refresh_windows > 0
+        assert st.refresh_energy_j == \
+            st.n_refresh_windows * table.refresh_window_j
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_job_record_energy(self, mode):
+        s = EngineSession(DeviceModel(mode, GEOM))
+        s.admit(device_graph(mode))
+        s.admit(device_graph(mode, app="ntt", n=16))
+        s.advance()
+        st = s.stats()
+        per_job = [s.job(j).energy_j for j in range(2)]
+        assert all(e > 0 for e in per_job)
+        assert sum(per_job) == pytest.approx(
+            st.op_energy_j + st.move_energy_j, rel=1e-12)
+
+
+class TestDifferentialEquality:
+    """Vector == scalar and recorded == plain, to the last bit."""
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_vector_equals_scalar(self, mode):
+        spec = RefreshSpec()
+        out = {}
+        for eng in ("vector", "scalar"):
+            s = EngineSession(DeviceModel(mode, GEOM), refresh=spec,
+                              engine=eng)
+            s.admit(device_graph(mode))
+            s.admit(device_graph(mode, app="ntt", n=16))
+            s.advance()
+            out[eng] = s.stats()
+        for f in ENERGY_FIELDS:
+            assert getattr(out["vector"], f) == getattr(out["scalar"], f), f
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_idle_gap_collapse_keeps_refresh_energy(self, mode):
+        # Satellite: small graphs admitted far apart in virtual time —
+        # the vector engine collapses the idle gaps between them, the
+        # scalar loop walks every refresh window through them.  All four
+        # combinations (engine x recorder) must agree exactly on the
+        # refresh accounting because a window is a window either way.
+        spec = RefreshSpec(interval_ns=3900.0, duration_ns=350.0)
+        gaps = (0.0, 2.0e5, 7.5e5)
+        out = {}
+        for eng in ("vector", "scalar"):
+            for rec_on in (False, True):
+                rec = Recorder() if rec_on else None
+                s = EngineSession(BankModel(mode), refresh=spec,
+                                  engine=eng, recorder=rec)
+                for at in gaps:
+                    g = ir.from_tasks([
+                        Task(0, "op", pe=1, duration=40.0),
+                        Task(1, "move", deps=(0,), src=1, dst=2, rows=1),
+                    ])
+                    s.advance(until=at)
+                    s.admit(g, at=at)
+                s.advance()
+                out[eng, rec_on] = s.stats()
+        base = out["scalar", False]
+        assert base.n_refresh_windows > 100   # the gaps really had windows
+        for key, st in out.items():
+            assert st.refresh_ns == base.refresh_ns, key
+            assert st.n_refresh_windows == base.n_refresh_windows, key
+            assert st.refresh_energy_j == base.refresh_energy_j, key
+            assert st.op_energy_j == base.op_energy_j, key
+            assert st.move_energy_j == base.move_energy_j, key
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_recorder_does_not_perturb_energy(self, mode):
+        out = {}
+        for rec_on in (False, True):
+            s = EngineSession(DeviceModel(mode, GEOM),
+                              refresh=RefreshSpec(),
+                              recorder=Recorder() if rec_on else None)
+            s.admit(device_graph(mode))
+            s.advance()
+            out[rec_on] = s.stats()
+        for f in ENERGY_FIELDS:
+            assert getattr(out[True], f) == getattr(out[False], f), f
+
+
+class TestAttributionAndPower:
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_attribution_reconciles(self, mode):
+        rec = Recorder()
+        s = EngineSession(DeviceModel(mode, GEOM), refresh=RefreshSpec(),
+                          recorder=rec)
+        s.admit(device_graph(mode))
+        s.admit(device_graph(mode, app="ntt", n=16))
+        s.advance()
+        st = s.stats()
+        att = energy_attribution(rec)
+        assert set(att["per_job_j"]) == {0, 1}
+        assert all(v > 0 for v in att["per_job_j"].values())
+        # per-job shares already include attributed refresh; the leftover
+        # is unattributed — together they are the whole metered total
+        recon = sum(att["per_job_j"].values()) + att["unattributed_j"]
+        assert att["total_j"] == pytest.approx(recon, rel=1e-12)
+        assert att["refresh_j"] == pytest.approx(st.refresh_energy_j,
+                                                 rel=1e-12)
+        assert att["total_j"] == pytest.approx(st.total_energy_j, rel=1e-9)
+
+    def test_attribution_per_tenant(self):
+        rec = Recorder()
+        s = EngineSession(DeviceModel(Interconnect.SHARED_PIM, GEOM),
+                          recorder=rec)
+        s.admit(device_graph(Interconnect.SHARED_PIM))
+        s.admit(device_graph(Interconnect.SHARED_PIM, app="ntt", n=16))
+        s.advance()
+        att = energy_attribution(rec, job_tenants={0: "alice", 1: "bob"})
+        per_tenant = att["per_tenant_j"]
+        assert set(per_tenant) == {"alice", "bob"}
+        assert sum(per_tenant.values()) == pytest.approx(
+            sum(att["per_job_j"].values()), rel=1e-12)
+
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    def test_power_series_conserves_energy(self, mode):
+        rec = Recorder()
+        s = EngineSession(DeviceModel(mode, GEOM), refresh=RefreshSpec(),
+                          recorder=rec)
+        s.admit(device_graph(mode))
+        s.advance()
+        st = s.stats()
+        ps = rec.power_series(windows=64)
+        assert ps["n_windows"] == 64
+        # integrate W back to J: sum over bins x window seconds
+        wns = ps["window_ns"]
+        integral = sum(ps["total_w"]) * wns * 1e-9
+        assert integral == pytest.approx(st.total_energy_j, rel=1e-9)
+        # group tracks partition the total
+        by_group = [sum(col) for col in zip(*ps["groups"].values())]
+        for got, want in zip(by_group, ps["total_w"]):
+            assert got == pytest.approx(want, rel=1e-9)
+        assert all(math.isfinite(w) and w >= 0 for w in ps["total_w"])
+
+    def test_power_series_empty_recorder(self):
+        with pytest.raises(ValueError, match="never attached"):
+            Recorder().power_series()
+        rec = Recorder()
+        EngineSession(BankModel(Interconnect.SHARED_PIM), recorder=rec)
+        assert rec.power_series() == {"window_ns": 0.0, "n_windows": 0,
+                                      "groups": {}, "total_w": []}
+
+    def test_chrome_trace_power_counters(self):
+        rec = Recorder()
+        s = EngineSession(DeviceModel(Interconnect.SHARED_PIM, GEOM),
+                          recorder=rec)
+        s.admit(device_graph(Interconnect.SHARED_PIM))
+        s.advance()
+        ev = rec.chrome_trace()["traceEvents"]
+        counters = [e for e in ev if e.get("ph") == "C"]
+        assert counters and all(e["pid"] == 3 for e in counters)
+        assert all(e["args"]["W"] >= 0 for e in counters)
+        names = {e["name"] for e in counters}
+        assert "power" in names
+
+
+class TestServingEnergy:
+    def tenants(self):
+        return [
+            TenantSpec.make("mm", "mm", n=16, banks=2, rate_jps=2000.0),
+            TenantSpec.make("ntt", "ntt", n=16, rate_jps=2000.0),
+        ]
+
+    def test_job_results_carry_energy(self):
+        tr = open_loop_trace(self.tenants(), jobs_per_tenant=4, seed=0)
+        rt = ServingRuntime(Interconnect.SHARED_PIM, GEOM)
+        results = rt.run(tr)
+        assert results and all(r.energy_nj > 0 for r in results)
+        st = rt.session.stats()
+        assert sum(r.energy_nj for r in results) * 1e-9 == pytest.approx(
+            st.op_energy_j + st.move_energy_j, rel=1e-9)
+
+    def test_summarize_reports_energy(self):
+        tr = open_loop_trace(self.tenants(), jobs_per_tenant=4, seed=0)
+        results = ServingRuntime(Interconnect.SHARED_PIM, GEOM).run(tr)
+        s = summarize(results)
+        assert s["energy_nj"] > 0
+        per_tenant = {name: s["per_tenant"][name]["energy_nj"]
+                      for name in ("mm", "ntt")}
+        assert all(v > 0 for v in per_tenant.values())
+        assert sum(per_tenant.values()) == pytest.approx(s["energy_nj"])
+        assert summarize([])["energy_nj"] == 0.0
+
+    def test_energy_counters_in_metrics(self):
+        from repro.obs.metrics import MetricsRegistry
+        tr = open_loop_trace(self.tenants(), jobs_per_tenant=3, seed=1)
+        m = MetricsRegistry()
+        rt = ServingRuntime(Interconnect.SHARED_PIM, GEOM, metrics=m)
+        results = rt.run(tr)
+        total = m.counter("energy_nj").value
+        assert total == pytest.approx(sum(r.energy_nj for r in results))
+        assert m.counter("energy_nj/mm").value > 0

@@ -188,12 +188,24 @@ class TestMetricPrimitives:
 
     def test_histogram_summary(self):
         h = obs.Histogram()
-        assert h.summary() == {"n": 0}
+        assert h.summary() == {"n": 0, "reliable": False}
         for v in (1.0, 2.0, 3.0, 4.0):
             h.observe(v)
         s = h.summary(percentiles=(50.0,))
         assert s["n"] == 4 and s["mean"] == 2.5
         assert s["min"] == 1.0 and s["max"] == 4.0 and s["p50"] == 2.5
+        assert s["reliable"] is True
+
+    def test_histogram_percentile_guards(self):
+        h = obs.Histogram()
+        # empty: no value, flagged unreliable -- never a raise or a NaN
+        assert h.percentile(99.0) == (None, False)
+        h.observe(7.0)
+        v, reliable = h.percentile(99.0)
+        assert v == 7.0 and reliable is False   # one sample: a constant
+        h.observe(9.0)
+        v, reliable = h.percentile(50.0)
+        assert v == 8.0 and reliable is True
 
     def test_registry_create_on_first_use_and_snapshot(self):
         m = obs.MetricsRegistry()
