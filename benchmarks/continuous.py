@@ -1,0 +1,245 @@
+"""Continuous-batching benchmark: session load x interconnect at a TPOT SLO.
+
+Drives the iteration-level serving runtime (:class:`ContinuousRuntime`)
+with a multi-turn conversational session fleet over one device, sweeping
+offered session load under both interconnects.  Loads are *calibrated*:
+one decode step of the heaviest model is scheduled offline under LISA on
+its resident bank count, and the p99 TPOT SLO is a fixed multiple of that
+step time — so the sweep asks how far each interconnect can push decode
+throughput before inter-token latency degrades.
+
+Written to ``BENCH_continuous.json``:
+
+* per-(interconnect, load) curves: sustained decode tokens/sec, TTFT and
+  TPOT percentiles, preemption and KV-migration counts;
+* the best decode tokens/sec each interconnect sustains while meeting the
+  p99 TPOT SLO, asserted **strictly higher for Shared-PIM than for
+  LISA** — the paper's concurrent-data-flow thesis restated as serving
+  capacity for iteration-batched decode;
+* a continuous-off consistency guard: with continuous batching disabled
+  the runtime must reproduce the whole-job :class:`ServingRuntime`
+  **bit-for-bit** on an identical job trace under both interconnects.
+
+The process exits non-zero if any guard fails or the sweep exceeds
+``--budget-s``.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/continuous.py            # full sweep
+    PYTHONPATH=src python benchmarks/continuous.py --smoke    # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry, partition
+from repro.device import scheduler as dev_sched
+from repro.frontend.lower import decode_step
+from repro.runtime import (ContinuousRuntime, ServingRuntime, SessionSpec,
+                           TenantSpec, open_loop_trace, session_trace,
+                           summarize)
+
+#: conversational fleet: a chat model with think time between turns plus a
+#: single-turn agent model, both shallow enough to sweep quickly
+SESSIONS = [
+    dict(name="chat", app="gemma3-1b", n_layers=4, prompt_tokens=512,
+         decode_tokens=16, turns=2, think_ns=5e5, rate_sps=1500.0),
+    dict(name="agent", app="granite-3-2b", n_layers=4, prompt_tokens=256,
+         decode_tokens=12, turns=1, think_ns=0.0, rate_sps=1500.0),
+]
+SESSIONS_SMOKE = [
+    dict(name="chat", app="gemma3-1b", n_layers=2, prompt_tokens=512,
+         decode_tokens=8, turns=2, think_ns=5e5, rate_sps=2000.0),
+    dict(name="agent", app="granite-3-2b", n_layers=2, prompt_tokens=256,
+         decode_tokens=6, turns=1, think_ns=0.0, rate_sps=2000.0),
+]
+
+#: offered session load multipliers; the upper end crowds the decode pool
+#: enough that chunked prefill and deadline preemption both engage
+LOADS = (0.25, 0.5, 1.0, 2.0, 4.0)
+
+
+def session_specs(raw: list[dict]) -> list[SessionSpec]:
+    return [SessionSpec.make(**spec) for spec in raw]
+
+
+def decode_step_ns(spec: SessionSpec, mode: Interconnect,
+                   geom: DeviceGeometry, tokens_per_bank: int) -> float:
+    """One decode step's makespan at full-prompt KV, empty device."""
+    kv = spec.prompt_tokens + spec.decode_tokens
+    n_banks = min(geom.n_banks,
+                  max(1, -(-kv // tokens_per_bank)))
+    banks = tuple(range(n_banks))
+    g = decode_step(spec.app, n_pes=n_banks * geom.pes_per_bank,
+                    kv_len=kv, **spec.kwargs)
+    placed = partition.place_on_banks(g, geom, banks)
+    return dev_sched.schedule(placed, mode, geom).makespan_ns
+
+
+def sweep_cell(mode: Interconnect, load: float, trace,
+               geom: DeviceGeometry, slo_ns: float,
+               chunk_tokens: int, tokens_per_bank: int) -> dict:
+    rt = ContinuousRuntime(mode, geom, chunk_tokens=chunk_tokens,
+                           tokens_per_bank=tokens_per_bank,
+                           tpot_slo_ns=slo_ns)
+    results = rt.run_sessions(trace)
+    s = summarize(results)
+    return {
+        "mode": mode.value, "load": load,
+        "n_sessions": s["n_jobs"],
+        "decode_tps": s["decode_tps"],
+        "ttft_p99_ns": s["ttft_ns"].get("p99"),
+        "tpot_p99_ns": s["tpot_ns"].get("p99"),
+        "tpot_reliable": s["tpot_ns"]["p99_reliable"],
+        "n_preemptions": sum(r.n_preemptions for r in results),
+        "n_migrations": sum(r.n_migrations for r in results),
+        "makespan_ns": s["makespan_ns"],
+    }
+
+
+def sustained_tps(rows: list[dict], mode: Interconnect,
+                  slo_ns: float) -> float:
+    """Best decode tokens/sec among loads whose TPOT p99 meets the SLO."""
+    ok = [r["decode_tps"] for r in rows
+          if r["mode"] == mode.value and r["tpot_reliable"]
+          and r["tpot_p99_ns"] is not None and r["tpot_p99_ns"] <= slo_ns]
+    return max(ok, default=0.0)
+
+
+def batch_mode_failures(geom: DeviceGeometry, smoke: bool,
+                        seed: int) -> list[str]:
+    """Continuous-off runtime vs the whole-job runtime, bit-for-bit."""
+    n = 24 if smoke else 60
+    tenants = [
+        TenantSpec.make("mm", "mm", n=n, banks=2, rate_jps=2000.0),
+        TenantSpec.make("bfs", "bfs", n_nodes=n + 6, banks=2, priority=1,
+                        rate_jps=2000.0),
+    ]
+    trace = open_loop_trace(tenants, jobs_per_tenant=6 if smoke else 12,
+                            seed=seed)
+    bad = []
+    for mode in Interconnect:
+        base = ServingRuntime(mode, geom).run(trace)
+        cont = ContinuousRuntime(mode, geom, continuous=False).run(trace)
+        if cont != base:
+            bad.append(f"{mode.value}: continuous=False diverges from "
+                       f"whole-job ServingRuntime")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fleet and session counts")
+    ap.add_argument("--banks", type=int, default=None,
+                    help="banks on the device (default: 16)")
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="sessions per spec per load level "
+                         "(default: 8 full, 3 smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-mult", type=float, default=6.0,
+                    help="p99 TPOT SLO as a multiple of the heaviest "
+                         "model's LISA decode-step time")
+    ap.add_argument("--chunk-tokens", type=int, default=128,
+                    help="prefill chunk size (the preemption boundary)")
+    ap.add_argument("--tokens-per-bank", type=int, default=256,
+                    help="KV tokens a bank holds before residency grows")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if the whole sweep exceeds this wall time")
+    ap.add_argument("--out", default="BENCH_continuous.json")
+    args = ap.parse_args(argv)
+
+    raw = SESSIONS_SMOKE if args.smoke else SESSIONS
+    specs = session_specs(raw)
+    n_banks = args.banks or 16
+    per_spec = args.sessions or (3 if args.smoke else 8)
+    geom = DeviceGeometry(channels=1, banks_per_channel=n_banks,
+                          bank_groups_per_channel=max(1, n_banks // 4),
+                          pes_per_bank=2)
+
+    t0 = time.perf_counter()
+    step_max = max(decode_step_ns(s, Interconnect.LISA, geom,
+                                  args.tokens_per_bank) for s in specs)
+    slo_ns = args.slo_mult * step_max
+    print(f"device: {geom.describe()}")
+    print(f"slowest LISA decode step: {step_max / 1e3:.1f} us; "
+          f"p99 TPOT SLO: {slo_ns / 1e3:.1f} us")
+
+    rows = []
+    for load in LOADS:
+        trace = session_trace(specs, sessions_per_spec=per_spec,
+                              seed=args.seed, load=load)
+        for mode in Interconnect:
+            r = sweep_cell(mode, load, trace, geom, slo_ns,
+                           args.chunk_tokens, args.tokens_per_bank)
+            rows.append(r)
+            p99 = r["tpot_p99_ns"]
+            ok = p99 is not None and p99 <= slo_ns and r["tpot_reliable"]
+            print(f"load={load:4.2f} {mode.value:10s} "
+                  f"tpot_p99={(p99 or 0) / 1e3:8.1f} us "
+                  f"decode={r['decode_tps']:8.0f} tok/s "
+                  f"pre={r['n_preemptions']:3d} mig={r['n_migrations']:3d} "
+                  f"{'OK' if ok else 'SLO-MISS'}")
+
+    sustained = {mode.value: sustained_tps(rows, mode, slo_ns)
+                 for mode in Interconnect}
+
+    failures = []
+    if not sustained["shared_pim"] > sustained["lisa"]:
+        failures.append(
+            f"shared-pim sustained decode {sustained['shared_pim']:.0f} "
+            f"tok/s not strictly above lisa {sustained['lisa']:.0f} at "
+            f"p99 TPOT SLO {slo_ns:.0f} ns")
+
+    mismatches = batch_mode_failures(geom, args.smoke, args.seed)
+    failures += mismatches
+
+    wall = time.perf_counter() - t0
+    if args.budget_s is not None and wall > args.budget_s:
+        failures.append(f"sweep {wall:.1f}s over budget {args.budget_s}s")
+
+    prior_wall = None
+    try:
+        with open(args.out) as f:
+            prior_wall = json.load(f)["config"]["wall_s"]
+    except (OSError, KeyError, ValueError):
+        pass
+
+    out = {
+        "config": {
+            "smoke": args.smoke, "banks": n_banks,
+            "sessions_per_spec": per_spec, "seed": args.seed,
+            "loads": list(LOADS), "sessions": raw,
+            "chunk_tokens": args.chunk_tokens,
+            "tokens_per_bank": args.tokens_per_bank,
+            "slo_ns": slo_ns, "slo_mult": args.slo_mult,
+            "wall_s": wall,
+            "prior_wall_s": prior_wall,
+            "wall_speedup": (prior_wall / wall
+                             if prior_wall and wall > 0 else None),
+        },
+        "curves": rows,
+        "sustained_decode_tps": sustained,
+        "batch_mode_matches_whole_job": not mismatches,
+        "guard_ok": not failures,
+        "failures": failures,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} cells, {wall:.1f}s)")
+    print(f"sustained decode tok/s at p99 TPOT SLO: {sustained}")
+    if failures:
+        print("FAILURES:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("shared-pim sustains strictly higher decode throughput than "
+          "lisa at the TPOT SLO; continuous-off == whole-job bit-for-bit")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

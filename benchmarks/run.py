@@ -29,6 +29,9 @@ _HEADLINES = {
                         lambda d: max(d.get("sustained_load", {})
                                       .get("shared_pim", {}).values(),
                                       default=None)),
+    "BENCH_continuous": ("sustained_decode_tps_shared_pim",
+                         lambda d: d.get("sustained_decode_tps", {})
+                                    .get("shared_pim")),
     "BENCH_obs": ("events_per_sec",
                   lambda d: d.get("events_per_sec")),
     "BENCH_energy": ("sp_transfer_energy_advantage_min",

@@ -21,8 +21,8 @@ model half of the repo stays off the hot import path of pure-Fig-8 runs.
 """
 
 from repro.frontend.lower import (MODEL_APPS, MODEL_PARAMS,  # noqa: F401
-                                  MODEL_PHASES, _model_struct, lower,
-                                  model_struct)
+                                  MODEL_PHASES, _model_struct, decode_step,
+                                  kv_tiles_for, lower, model_struct)
 from repro.core import taskgraph
 
 

@@ -80,6 +80,23 @@ _WIDTH_CAP = 8
 #: scan chain steps per this much ssm_state
 _SCAN_QUANTUM = 16
 _SCAN_CAP = 4
+#: attention-context tiles per this many resident KV tokens (decode's
+#: attend-against-cache cost, prefill's attend-against-prior-turn cost)
+_KV_QUANTUM = 256
+_KV_CAP = 8
+
+
+def kv_tiles_for(kv_len: int) -> int:
+    """Attention context tiles for ``kv_len`` resident KV-cache tokens.
+
+    0 for an empty cache (the legacy graphs' shape); otherwise
+    ceil(kv_len / :data:`_KV_QUANTUM`) clamped to :data:`_KV_CAP`, so a
+    session's decode-step graphs grow with its context and saturate at the
+    cap — keeping the per-step graph serving-sized however long the chat.
+    """
+    if kv_len <= 0:
+        return 0
+    return _span(kv_len, _KV_QUANTUM, _KV_CAP)
 
 
 def _span(dim: int, quantum: int, cap: int) -> int:
@@ -208,14 +225,19 @@ def _layer_kind(cfg: ModelConfig, layer: int) -> str:
 
 
 def lower(cfg: ModelConfig, phase: str = "decode", *, n_pes: int = 16,
-          n_layers: int | None = None,
-          seq_tiles: int | None = None) -> TaskGraph:
+          n_layers: int | None = None, seq_tiles: int | None = None,
+          kv_tiles: int | None = None) -> TaskGraph:
     """Structural inference graph for one model config (see module doc).
 
     ``n_layers`` truncates (or extends — kinds cycle) the layer stack so
     serving tenants can run depth-scaled jobs; ``seq_tiles`` overrides the
     phase default (prefill :data:`PREFILL_SEQ_TILES`, decode
-    :data:`DECODE_SEQ_TILES`).
+    :data:`DECODE_SEQ_TILES`).  ``kv_tiles`` (default 0: the legacy shape,
+    bit-identical graphs) adds that many resident-context tiles to every
+    attention sub-block — decode attends against the cache in
+    ``max(1, kv_tiles)`` steps, prefill's causal work starts ``kv_tiles``
+    deep — which is how :func:`decode_step` parameterizes a one-token graph
+    by the session's current KV length.
     """
     if phase not in MODEL_PHASES:
         raise ValueError(f"unknown phase {phase!r}; pick one of "
@@ -227,6 +249,9 @@ def lower(cfg: ModelConfig, phase: str = "decode", *, n_pes: int = 16,
         if seq_tiles is None else seq_tiles
     if tiles < 1:
         raise ValueError(f"seq_tiles must be >= 1, got {tiles}")
+    kv = 0 if kv_tiles is None else kv_tiles
+    if not 0 <= kv <= _KV_CAP:
+        raise ValueError(f"kv_tiles must be in [0, {_KV_CAP}], got {kv}")
 
     # stage shapes from the config's dimensions (decode: narrow)
     head_dim = cfg.head_dim or (cfg.d_model // cfg.n_heads
@@ -292,9 +317,10 @@ def lower(cfg: ModelConfig, phase: str = "decode", *, n_pes: int = 16,
             ctx = c.reduce(c.matmul(x, home, qkv_w, d_depth, f"{t}.qkv"),
                            home, f"{t}.qkv")
             a = ctx[0]
-            # decode attends against the cache in O(1); prefill's causal
-            # score/АV work grows with the tile position
-            for i in range(1 if phase == "decode" else s + 1):
+            # decode attends against the cache (kv_tiles context tiles,
+            # min one step); prefill's causal score/АV work starts kv_tiles
+            # deep and grows with the tile position
+            for i in range(max(1, kv) if phase == "decode" else kv + s + 1):
                 a = c.op(c.agg(home), "mul", deps=(a,), tag=f"{t}.attn{i}")
             proj = c.reduce(c.matmul((a, home), home, out_w, d_depth,
                                      f"{t}.proj"), home, f"{t}.proj")
@@ -347,22 +373,39 @@ def lower(cfg: ModelConfig, phase: str = "decode", *, n_pes: int = 16,
 
 @functools.lru_cache(maxsize=None)
 def _model_struct(arch: str, phase: str, n_pes: int,
-                  n_layers: int | None, seq_tiles: int | None) -> TaskGraph:
+                  n_layers: int | None, seq_tiles: int | None,
+                  kv_tiles: int | None = None) -> TaskGraph:
     return lower(registry.get(arch), phase, n_pes=n_pes, n_layers=n_layers,
-                 seq_tiles=seq_tiles)
+                 seq_tiles=seq_tiles, kv_tiles=kv_tiles)
 
 
 def model_struct(arch: str, phase: str = "decode", n_pes: int = 16,
-                 n_layers: int | None = None,
-                 seq_tiles: int | None = None) -> TaskGraph:
+                 n_layers: int | None = None, seq_tiles: int | None = None,
+                 kv_tiles: int | None = None) -> TaskGraph:
     """Memoized structural graph for a registry model (the app entry)."""
     if arch not in MODEL_APPS:
         raise ValueError(f"unknown arch {arch!r}; known: {MODEL_APPS}")
-    return _model_struct(arch, phase, n_pes, n_layers, seq_tiles)
+    return _model_struct(arch, phase, n_pes, n_layers, seq_tiles, kv_tiles)
+
+
+def decode_step(arch: str, *, n_pes: int = 16, kv_len: int = 0,
+                n_layers: int | None = None) -> TaskGraph:
+    """One-token decode graph parameterized by the session's KV length.
+
+    The continuous-batching runtime chains these: every decoded token is
+    one small spliced job whose attention cost reflects the KV cache
+    resident in the session's banks (via :func:`kv_tiles_for`, quantized so
+    the memoized graph population stays bounded).  ``kv_len=0`` is exactly
+    the legacy whole-job decode graph.
+    """
+    if kv_len < 0:
+        raise ValueError(f"kv_len must be >= 0, got {kv_len}")
+    return model_struct(arch, "decode", n_pes, n_layers,
+                        kv_tiles=kv_tiles_for(kv_len))
 
 
 #: the (keyword, default) signature every model app registers with
 #: :func:`repro.core.taskgraph.register_app` — matching the builtin apps'
 #: derived signatures, so ``structural(arch, n_pes=…, phase=…)`` dispatches
 MODEL_PARAMS = (("phase", "decode"), ("n_pes", 16), ("n_layers", None),
-                ("seq_tiles", None))
+                ("seq_tiles", None), ("kv_tiles", None))

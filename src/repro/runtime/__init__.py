@@ -26,9 +26,11 @@ Quickstart::
 """
 
 from repro.runtime.allocator import (ADMISSION_POLICIES,  # noqa: F401
-                                     BankAllocator, Lease)
-from repro.runtime.serve import (JobResult, ServingRuntime,  # noqa: F401
-                                 summarize)
+                                     BankAllocator, ContinuousAllocator,
+                                     Lease, Residency, StepGrant)
+from repro.runtime.serve import (ContinuousRuntime, JobResult,  # noqa: F401
+                                 ServingRuntime, SessionResult, summarize)
 from repro.runtime.trace import (TRACE_APPS, ClosedLoopSource,  # noqa: F401
-                                 JobRequest, TenantSpec, known_apps,
-                                 open_loop_trace)
+                                 JobRequest, MultiTurnSource, SessionRequest,
+                                 SessionSpec, TenantSpec, known_apps,
+                                 open_loop_trace, session_trace)

@@ -185,3 +185,147 @@ class ClosedLoopSource:
         seq = self._issued[t.name]
         self._issued[t.name] = seq + 1
         return JobRequest(at, t, seq)
+
+
+# --- session streams (continuous batching) ---------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """One conversational tenant class: a model, a context shape, traffic.
+
+    Where a :class:`TenantSpec` names closed jobs, a session names a
+    *conversation*: ``turns`` rounds of (prompt_tokens prefill →
+    decode_tokens generated one spliced step at a time), with the KV cache
+    resident in banks between turns and ``think_ns`` of user think time
+    separating them.  ``app`` must be a registered model arch — sessions
+    lower through :func:`repro.frontend.lower.decode_step`, which only the
+    model frontend parameterizes by KV length.
+    """
+
+    name: str
+    app: str
+    kw: tuple = ()               # extra lowering kwargs (n_layers, ...)
+    prompt_tokens: int = 512
+    decode_tokens: int = 32
+    turns: int = 1
+    think_ns: float = 0.0        # between-turn user think time
+    rate_sps: float = 20.0       # open-loop session arrival rate (sess/s)
+    priority: int = 0
+    concurrency: int = 1         # closed-loop sessions kept live
+
+    @classmethod
+    def make(cls, name: str, app: str, *, prompt_tokens: int = 512,
+             decode_tokens: int = 32, turns: int = 1, think_ns: float = 0.0,
+             rate_sps: float = 20.0, priority: int = 0,
+             concurrency: int = 1, **kw) -> "SessionSpec":
+        from repro.frontend.lower import MODEL_APPS
+        if app not in MODEL_APPS:
+            raise ValueError(
+                f"session app must be a registered model arch (decode_step "
+                f"is KV-parameterized); got {app!r}, known: {MODEL_APPS}")
+        if prompt_tokens < 1 or decode_tokens < 1 or turns < 1:
+            raise ValueError(
+                f"invalid session shape for {name!r}: prompt_tokens="
+                f"{prompt_tokens}, decode_tokens={decode_tokens}, "
+                f"turns={turns}")
+        if rate_sps < 0 or think_ns < 0 or concurrency < 1:
+            raise ValueError(
+                f"invalid session traffic for {name!r}: rate_sps="
+                f"{rate_sps}, think_ns={think_ns}, "
+                f"concurrency={concurrency}")
+        return cls(name, app, tuple(sorted(kw.items())), prompt_tokens,
+                   decode_tokens, turns, think_ns, rate_sps, priority,
+                   concurrency)
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.kw)
+
+    def scaled(self, load: float) -> "SessionSpec":
+        """This spec with its open-loop session rate scaled by ``load``."""
+        return dataclasses.replace(self, rate_sps=self.rate_sps * load)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionRequest:
+    """One session arrival of a spec's stream."""
+
+    arrival_ns: float
+    session: SessionSpec
+    seq: int                     # per-spec sequence number
+
+    @property
+    def sort_key(self) -> tuple:
+        return (self.arrival_ns, self.session.name, self.seq)
+
+
+def session_trace(specs, *, sessions_per_spec: int, seed: int = 0,
+                  load: float = 1.0) -> list[SessionRequest]:
+    """Merged Poisson session-arrival streams, one per spec.
+
+    The exact analogue of :func:`open_loop_trace` at session granularity:
+    deterministic per (specs, seed, load), every load level starts the same
+    session population, ``load`` scales every spec's arrival rate.
+    """
+    if sessions_per_spec < 1:
+        raise ValueError(
+            f"sessions_per_spec must be >= 1, got {sessions_per_spec}")
+    out: list[SessionRequest] = []
+    for si, s in enumerate(specs):
+        rate = s.rate_sps * load
+        if rate <= 0.0:
+            raise ValueError(
+                f"session spec {s.name!r} has arrival rate {rate} sess/s "
+                f"(rate_sps={s.rate_sps}, load={load}); fixed-count "
+                "session streams need a positive rate")
+        rng = _tenant_rng(seed, si)
+        mean_ns = 1e9 / rate
+        ts = 0.0
+        for seq in range(sessions_per_spec):
+            ts += float(rng.exponential(mean_ns))
+            out.append(SessionRequest(ts, s, seq))
+    out.sort(key=lambda r: r.sort_key)
+    return out
+
+
+class MultiTurnSource:
+    """Closed-loop conversations: a finished session spawns the next user.
+
+    Every spec keeps ``concurrency`` sessions live from t=0; when one
+    session's final turn completes, the next session of that spec arrives
+    after an exponential think time (mean ``think_ns``) — the interactive
+    fleet whose decode streams stay resident while fresh prefill flows in
+    around them.  Deterministic per (specs, seed).
+    """
+
+    def __init__(self, specs, *, sessions_per_spec: int, seed: int = 0):
+        if sessions_per_spec < 1:
+            raise ValueError("sessions_per_spec must be >= 1")
+        self._specs = list(specs)
+        self._rngs = {s.name: _tenant_rng(seed, i)
+                      for i, s in enumerate(self._specs)}
+        self._issued = {s.name: 0 for s in self._specs}
+        self._budget = sessions_per_spec
+
+    def initial(self) -> list[SessionRequest]:
+        out = []
+        for s in self._specs:
+            for _ in range(min(s.concurrency, self._budget)):
+                out.append(self._issue(s, 0.0))
+        out.sort(key=lambda r: r.sort_key)
+        return out
+
+    def on_session_complete(self, req: SessionRequest, now_ns: float
+                            ) -> SessionRequest | None:
+        s = req.session
+        if self._issued[s.name] >= self._budget:
+            return None
+        think = float(self._rngs[s.name].exponential(s.think_ns)) \
+            if s.think_ns > 0.0 else 0.0
+        return self._issue(s, now_ns + think)
+
+    def _issue(self, s: SessionSpec, at: float) -> SessionRequest:
+        seq = self._issued[s.name]
+        self._issued[s.name] = seq + 1
+        return SessionRequest(at, s, seq)

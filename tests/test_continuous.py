@@ -1,0 +1,575 @@
+"""Continuous batching: residencies, iteration scheduling, TTFT/TPOT.
+
+Covers the decoupled job/lease lifecycle end to end: the group-aligned
+bank picker, the ContinuousAllocator's residency/preemption/migration
+machinery (including property-based invariant checks over interleaved op
+sequences), the KV-parameterized decode_step lowering, the new summarize()
+streaming sections, and the ContinuousRuntime iteration scheduler —
+with the continuous-off path pinned bit-for-bit to the whole-job runtime.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
+from repro.core import taskgraph
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry
+from repro.runtime import (BankAllocator, ContinuousAllocator,
+                           ContinuousRuntime, MultiTurnSource,
+                           ServingRuntime, SessionResult, SessionSpec,
+                           TenantSpec, open_loop_trace, session_trace,
+                           summarize)
+
+#: 16 banks in 4 groups of 4 — group structure visible to the picker
+GEOM = DeviceGeometry(channels=1, banks_per_channel=16,
+                      bank_groups_per_channel=4, pes_per_bank=2)
+#: small device for allocator-level tests: 8 banks in 4 groups of 2
+SMALL = DeviceGeometry(channels=1, banks_per_channel=8,
+                       bank_groups_per_channel=4)
+
+
+def specs(decode_tokens=8, turns=1, think_ns=0.0, rate=2000.0):
+    return [
+        SessionSpec.make("chat", "gemma3-1b", n_layers=2,
+                         prompt_tokens=512, decode_tokens=decode_tokens,
+                         turns=turns, think_ns=think_ns, rate_sps=rate),
+        SessionSpec.make("agent", "granite-3-2b", n_layers=2,
+                         prompt_tokens=256, decode_tokens=decode_tokens,
+                         turns=turns, think_ns=think_ns, rate_sps=rate),
+    ]
+
+
+# --- group-aligned bank picking ---------------------------------------------------
+
+
+class TestGroupAlignedPicks:
+    def test_prefers_group_aligned_run(self):
+        # 8 banks, groups of 2: free {1,2} straddles groups 0/1, {4,5} is
+        # exactly group 2 — the group-aligned run must win even though
+        # {1,2} is lower
+        alloc = BankAllocator(SMALL)
+        for lease in alloc.request(8):
+            pass
+        alloc._active.clear()
+        alloc._free = {1, 2, 4, 5}
+        assert alloc._pick_banks(2) == (4, 5)
+
+    def test_prefers_fewer_groups_spanned(self):
+        # free {1,2,3} (spans groups 0-1) vs {5,6,7} (spans groups 2-3):
+        # both span two groups, but {6,7}+{5}... for k=3 both span 2
+        # groups; {1,2,3} starts off-boundary, {5,6,7} too — lowest wins
+        alloc = BankAllocator(SMALL)
+        alloc._free = {1, 2, 3, 5, 6, 7}
+        assert alloc._pick_banks(3) == (1, 2, 3)
+        # but a boundary-started run beats an off-boundary one
+        alloc._free = {1, 2, 3, 4, 5}
+        assert alloc._pick_banks(2) == (2, 3)
+        assert alloc._pick_banks(4) == (2, 3, 4, 5)
+
+    def test_single_group_degenerates_to_lowest_run(self):
+        geom = DeviceGeometry(channels=1, banks_per_channel=8)
+        alloc = BankAllocator(geom)
+        alloc._free = {1, 2, 4, 5}
+        assert alloc._pick_banks(2) == (1, 2)
+
+    def test_fallback_scatter_when_no_run(self):
+        alloc = BankAllocator(SMALL)
+        alloc._free = {0, 2, 4, 6}
+        assert alloc._pick_banks(3) == (0, 2, 4)
+
+
+# --- the continuous allocator -----------------------------------------------------
+
+
+class TestContinuousAllocator:
+    def make(self, **kw):
+        kw.setdefault("decode_reserve", 4)
+        kw.setdefault("tokens_per_bank", 100)
+        return ContinuousAllocator(SMALL, **kw)
+
+    def test_banks_for_quantization(self):
+        alloc = self.make()
+        assert alloc.banks_for(0) == 1
+        assert alloc.banks_for(1) == 1
+        assert alloc.banks_for(100) == 1
+        assert alloc.banks_for(101) == 2
+        assert alloc.banks_for(10_000) == SMALL.n_banks
+
+    def test_prefill_pool_cap(self):
+        alloc = self.make()           # pool = 8 - 4 = 4
+        assert alloc.prefill_pool == 4
+        got = alloc.request(3, payload="a")
+        assert len(got) == 1
+        assert alloc.request(2, payload="b") == []   # 3 + 2 > pool
+        assert alloc.n_queued == 1
+        with pytest.raises(ValueError):
+            alloc.request(5)          # can never fit the pool
+        # releasing the first admits the queued one
+        granted = alloc.release(got[0])
+        assert [lease.payload for lease in granted] == ["b"]
+
+    def test_admission_pause_gates_drain(self):
+        alloc = self.make()
+        alloc.admission_paused = True
+        assert alloc.request(1, payload="x") == []
+        assert alloc.n_queued == 1
+        assert alloc.drain() == []
+        alloc.admission_paused = False
+        assert [lease.payload for lease in alloc.drain()] == ["x"]
+
+    def test_preempt_requeues_ahead_and_does_not_drain(self):
+        alloc = self.make()
+        (first,) = alloc.request(2, payload="victim")
+        alloc.request(3, payload="waiter")
+        assert alloc.n_queued == 1
+        alloc.preempt(first)
+        # banks freed, nothing admitted until the caller drains
+        assert alloc.n_free == SMALL.n_banks and alloc.n_queued == 2
+        granted = alloc.drain()
+        # the preempted job re-admits ahead of the earlier-queued waiter
+        # (which still can't fit the pool next to it)
+        assert [lease.payload for lease in granted] == ["victim"]
+        regrant = alloc.release(granted[0])
+        assert [lease.payload for lease in regrant] == ["waiter"]
+
+    def test_preempt_rejects_stale_lease(self):
+        alloc = self.make()
+        (lease,) = alloc.request(1)
+        alloc.release(lease)
+        with pytest.raises(ValueError):
+            alloc.preempt(lease)
+
+    def test_acquire_grow_and_extend(self):
+        alloc = self.make()
+        res = alloc.acquire("t", kv_tokens=150)
+        assert res is not None and len(res.banks) == 2
+        assert alloc.n_banks_resident == 2
+        assert alloc.grow(res, 50) is True          # 200 tokens -> 2 banks
+        assert len(res.banks) == 2
+        assert alloc.grow(res, 100) is True         # 300 tokens -> 3 banks
+        assert len(res.banks) == 3
+        # fill the device; growth past capacity reports over-packed
+        other = alloc.acquire("u", kv_tokens=100 * (SMALL.n_banks - 3))
+        assert other is not None and alloc.n_free == 0
+        assert alloc.grow(res, 100) is False
+        assert alloc.release_residency(other) == []
+        assert alloc.grow(res, 0) is True           # heals once banks free
+
+    def test_adopt_in_place_keeps_and_frees(self):
+        alloc = self.make()
+        (lease,) = alloc.request(3, payload="s")
+        res = alloc.adopt(lease, "s", kv_tokens=120)   # needs 2 of the 3
+        assert res.banks == lease.banks[:2]
+        assert alloc.n_banks_prefill == 0
+        assert alloc.n_free == SMALL.n_banks - 2
+        with pytest.raises(ValueError):
+            alloc.release(lease)      # the lease was consumed by adoption
+
+    def test_adopt_extends_when_kv_outgrew_lease(self):
+        alloc = self.make()
+        (lease,) = alloc.request(1, payload="s")
+        res = alloc.adopt(lease, "s", kv_tokens=250)   # needs 3
+        assert len(res.banks) == 3 and res.banks[0] == lease.banks[0]
+
+    def test_grant_step_sequence(self):
+        alloc = self.make()
+        res = alloc.acquire("t")
+        g0, g1 = alloc.grant_step(res), alloc.grant_step(res)
+        assert (g0.step, g1.step) == (0, 1)
+        assert g0.rid == res.rid and g0.banks == res.banks
+        assert res.steps_granted == 2
+
+    def test_migration_holds_both_sets_until_commit(self):
+        alloc = self.make()
+        res = alloc.acquire("t", kv_tokens=150)
+        src = res.banks
+        dst = alloc.begin_migration(res)
+        assert dst is not None and set(dst).isdisjoint(src)
+        assert alloc.n_banks_resident == 4          # both copies held
+        assert set(src).isdisjoint(alloc._free)
+        assert set(dst).isdisjoint(alloc._free)
+        alloc.commit_migration(res)
+        assert res.banks == dst and res.migrating_to is None
+        assert set(src) <= alloc._free
+        assert alloc.n_banks_resident == 2
+
+    def test_abort_migration_returns_destination(self):
+        alloc = self.make()
+        res = alloc.acquire("t")
+        before = alloc.n_free
+        alloc.begin_migration(res)
+        alloc.abort_migration(res)
+        assert alloc.n_free == before and res.migrating_to is None
+
+    def test_release_residency_mid_migration_frees_both(self):
+        alloc = self.make()
+        res = alloc.acquire("t", kv_tokens=150)
+        alloc.begin_migration(res)
+        alloc.release_residency(res)
+        assert alloc.n_free == SMALL.n_banks
+
+    def test_stale_residency_rejected(self):
+        alloc = self.make()
+        res = alloc.acquire("t")
+        alloc.release_residency(res)
+        for call in (lambda: alloc.grow(res, 1),
+                     lambda: alloc.grant_step(res),
+                     lambda: alloc.begin_migration(res),
+                     lambda: alloc.release_residency(res)):
+            with pytest.raises(ValueError):
+                call()
+
+
+# --- interleaved-op invariants (property-based + seeded driver) -------------------
+
+
+def _conservation(alloc: ContinuousAllocator) -> None:
+    held: list[int] = []
+    for lease in alloc._active.values():
+        held.extend(lease.banks)
+    for res in alloc._resident.values():
+        held.extend(res.banks)
+        held.extend(res.migrating_to or ())
+    assert len(held) == len(set(held)), "bank double-leased"
+    assert set(held).isdisjoint(alloc._free), "held bank marked free"
+    assert len(held) + alloc.n_free == alloc.geom.n_banks, \
+        "bank conservation violated"
+
+
+def _interleave(seed: int, n_ops: int = 120) -> list:
+    """Drive a random request/grant/release/preempt/migrate interleave,
+    checking the allocator invariants after every op; returns the event
+    log (for determinism comparison)."""
+    rng = np.random.default_rng(seed)
+    alloc = ContinuousAllocator(SMALL, decode_reserve=3, tokens_per_bank=50)
+    log: list = []
+    leases: list = []
+    rezs: list = []
+    preempted: set = set()
+    admitted: set = set()
+    payload = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 8))
+        if op == 0:
+            banks = int(rng.integers(1, alloc.prefill_pool + 1))
+            for lease in alloc.request(banks, payload=payload):
+                leases.append(lease)
+                admitted.add(lease.payload)
+            log.append(("req", payload, banks))
+            payload += 1
+        elif op == 1 and leases:
+            lease = leases.pop(int(rng.integers(0, len(leases))))
+            for granted in alloc.release(lease):
+                leases.append(granted)
+                admitted.add(granted.payload)
+            log.append(("rel", lease.ticket))
+        elif op == 2 and leases:
+            lease = leases.pop(int(rng.integers(0, len(leases))))
+            alloc.preempt(lease)
+            preempted.add(lease.payload)
+            log.append(("pre", lease.ticket))
+        elif op == 3:
+            res = alloc.acquire(f"t{payload}",
+                                kv_tokens=int(rng.integers(0, 120)))
+            if res is not None:
+                rezs.append(res)
+            log.append(("acq", res.rid if res else None))
+        elif op == 4 and rezs:
+            res = rezs[int(rng.integers(0, len(rezs)))]
+            if res.migrating_to is None:
+                ok = alloc.grow(res, int(rng.integers(1, 80)))
+                log.append(("grow", res.rid, ok))
+        elif op == 5 and rezs:
+            res = rezs[int(rng.integers(0, len(rezs)))]
+            if res.migrating_to is None:
+                dst = alloc.begin_migration(res)
+                log.append(("mig", res.rid, dst))
+            else:
+                if rng.integers(0, 2):
+                    alloc.commit_migration(res)
+                    log.append(("commit", res.rid))
+                else:
+                    alloc.abort_migration(res)
+                    log.append(("abort", res.rid))
+        elif op == 6 and rezs:
+            res = rezs.pop(int(rng.integers(0, len(rezs))))
+            for granted in alloc.release_residency(res):
+                leases.append(granted)
+                admitted.add(granted.payload)
+            log.append(("relres", res.rid))
+        elif op == 7:
+            alloc.admission_paused = bool(rng.integers(0, 2)) \
+                and alloc.admission_paused
+            for granted in alloc.drain():
+                leases.append(granted)
+                admitted.add(granted.payload)
+            log.append(("drain",))
+        _conservation(alloc)
+        assert alloc.n_banks_prefill == \
+            sum(len(lease.banks) for lease in alloc._active.values())
+    # wind down: everything releases, the queue fully re-admits —
+    # preempted work must always come back
+    alloc.admission_paused = False
+    for res in rezs:
+        for granted in alloc.release_residency(res):
+            leases.append(granted)
+            admitted.add(granted.payload)
+    while leases or alloc.n_queued:
+        if not leases:
+            granted = alloc.drain()
+            assert granted, "queued work stuck with free banks"
+            leases.extend(granted)
+            admitted.update(lease.payload for lease in granted)
+            continue
+        for granted in alloc.release(leases.pop()):
+            leases.append(granted)
+            admitted.add(granted.payload)
+        _conservation(alloc)
+    assert preempted <= admitted, "preempted work never re-admitted"
+    assert alloc.n_free == alloc.geom.n_banks
+    return log
+
+
+class TestInterleaveInvariants:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_seeded_interleaves(self, seed):
+        _interleave(seed)
+
+    def test_deterministic_under_seed(self):
+        assert _interleave(123) == _interleave(123)
+        assert _interleave(123) != _interleave(124) or True  # logs may differ
+
+    @hypothesis.given(st.integers(min_value=0, max_value=10_000))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_property_interleaves(self, seed):
+        _interleave(seed, n_ops=60)
+
+
+# --- decode_step lowering ---------------------------------------------------------
+
+
+class TestDecodeStep:
+    def test_kv_zero_is_the_legacy_graph(self):
+        from repro.frontend.lower import decode_step
+        base = taskgraph.structural("gemma3-1b", n_pes=16, n_layers=2)
+        step = decode_step("gemma3-1b", n_pes=16, kv_len=0, n_layers=2)
+        assert step.n == base.n
+        assert list(step.pe) == list(base.pe)
+        assert list(step.kinds) == list(base.kinds)
+
+    def test_graph_grows_monotonically_with_kv(self):
+        from repro.frontend.lower import decode_step
+        sizes = [decode_step("gemma3-1b", kv_len=k, n_layers=2).n
+                 for k in (0, 200, 600, 2000, 10_000, 100_000)]
+        assert sizes == sorted(sizes)
+        assert sizes[-1] > sizes[0]
+        # capped: enormous contexts stop growing
+        assert sizes[-1] == decode_step("gemma3-1b", kv_len=10**7,
+                                        n_layers=2).n
+
+    def test_kv_tiles_quantization(self):
+        from repro.frontend.lower import _KV_CAP, kv_tiles_for
+        assert kv_tiles_for(0) == 0
+        assert kv_tiles_for(-5) == 0
+        assert kv_tiles_for(1) == 1
+        assert kv_tiles_for(256) == 1
+        assert kv_tiles_for(257) == 2
+        assert kv_tiles_for(10**9) == _KV_CAP
+
+    def test_prefill_context_depth(self):
+        base = taskgraph.structural("gemma3-1b", phase="prefill",
+                                    n_pes=16, n_layers=2)
+        deep = taskgraph.structural("gemma3-1b", phase="prefill",
+                                    n_pes=16, n_layers=2, kv_tiles=3)
+        assert deep.n > base.n
+
+    def test_validation(self):
+        from repro.frontend.lower import decode_step
+        with pytest.raises(ValueError):
+            decode_step("gemma3-1b", kv_len=-1)
+        with pytest.raises(ValueError):
+            taskgraph.structural("gemma3-1b", n_pes=16, kv_tiles=99)
+
+
+# --- summarize(): TTFT / TPOT sections --------------------------------------------
+
+
+def _session(tenant="s", seq=0, arrival=0.0, token_ns=(), turn_start=(0.0,),
+             turn_first=(), tokens_per_turn=4):
+    return SessionResult(tenant, "gemma3-1b", seq, arrival, arrival,
+                         token_ns[-1] if token_ns else arrival,
+                         tuple(token_ns), tuple(turn_start),
+                         tuple(turn_first), tokens_per_turn, 1, 0, 0, 0)
+
+
+class TestSummarizeStreams:
+    def test_job_only_batches_keep_empty_stream_sections(self):
+        s = summarize([])
+        assert s["ttft_ns"] == {"n": 0, "p99_reliable": False}
+        assert s["tpot_ns"] == {"n": 0, "p99_reliable": False}
+        assert s["decode_tps"] == 0.0
+
+    def test_zero_one_two_tpot_samples(self):
+        # one token: no gaps -> n=0, no percentile keys at all
+        r = _session(token_ns=(10.0,), turn_first=(10.0,))
+        s = summarize([r])
+        assert s["tpot_ns"] == {"n": 0, "p99_reliable": False}
+        assert "p99" not in s["tpot_ns"]
+        # two tokens: one gap -> percentiles exist but are unreliable
+        r = _session(token_ns=(10.0, 14.0), turn_first=(10.0,))
+        s = summarize([r])
+        assert s["tpot_ns"]["n"] == 1
+        assert s["tpot_ns"]["p99"] == 4.0 and s["tpot_ns"]["mean"] == 4.0
+        assert s["tpot_ns"]["p99_reliable"] is False
+        # three tokens: two gaps -> reliable at the default threshold
+        r = _session(token_ns=(10.0, 14.0, 20.0), turn_first=(10.0,))
+        s = summarize([r])
+        assert s["tpot_ns"]["n"] == 2 and s["tpot_ns"]["p99_reliable"]
+        assert s["tpot_ns"]["mean"] == 5.0
+
+    def test_min_samples_threshold_applies_to_streams(self):
+        r = _session(token_ns=(10.0, 14.0, 20.0), turn_first=(10.0,))
+        s = summarize([r], min_samples=3)
+        assert s["tpot_ns"]["n"] == 2
+        assert s["tpot_ns"]["p99_reliable"] is False
+
+    def test_ttft_one_sample_per_turn(self):
+        r = _session(token_ns=(10.0, 12.0, 110.0, 115.0),
+                     turn_start=(0.0, 100.0), turn_first=(10.0, 110.0),
+                     tokens_per_turn=2)
+        s = summarize([r])
+        assert s["ttft_ns"]["n"] == 2
+        assert s["ttft_ns"]["mean"] == 10.0
+        assert s["ttft_ns"]["p99_reliable"] is True
+        # the 110 -> 12 jump across turns is never a TPOT sample
+        assert r.tpot_samples == (2.0, 5.0)
+
+    def test_decode_tps_counts_tokens_over_span(self):
+        r = _session(token_ns=(5e8, 1e9), turn_first=(5e8,),
+                     tokens_per_turn=2)
+        s = summarize([r])
+        assert s["decode_tps"] == pytest.approx(2.0)
+
+    def test_ttft_property_includes_queueing(self):
+        r = SessionResult("s", "gemma3-1b", 0, arrival_ns=0.0,
+                          admit_ns=3.0, finish_ns=20.0,
+                          token_ns=(12.0, 20.0), turn_start_ns=(0.0,),
+                          turn_first_ns=(12.0,), tokens_per_turn=2,
+                          banks_resident=1, n_migrations=0,
+                          n_preemptions=0, n_tasks=0)
+        assert r.ttft_ns == 12.0 and r.queue_ns == 3.0
+
+
+# --- the iteration scheduler end to end -------------------------------------------
+
+
+class TestContinuousRuntime:
+    def run_fleet(self, mode, *, turns=1, think_ns=0.0, slo=2e5, **kw):
+        rt = ContinuousRuntime(mode, GEOM, chunk_tokens=128,
+                               tokens_per_bank=256, tpot_slo_ns=slo, **kw)
+        tr = session_trace(specs(turns=turns, think_ns=think_ns),
+                           sessions_per_spec=3, seed=0)
+        return rt, rt.run_sessions(tr)
+
+    def test_every_token_lands_once(self):
+        rt, res = self.run_fleet(Interconnect.SHARED_PIM, turns=2,
+                                 think_ns=5e5)
+        assert len(res) == 6
+        for r in res:
+            assert len(r.token_ns) == r.tokens_per_turn * 2
+            assert list(r.token_ns) == sorted(r.token_ns)
+            assert len(r.turn_first_ns) == len(r.turn_start_ns) == 2
+        # the device fully quiesced: no leak of banks or queue entries
+        assert rt.allocator.n_free == GEOM.n_banks
+        assert rt.allocator.n_resident == 0 and rt.allocator.n_queued == 0
+
+    def test_deterministic(self):
+        _, a = self.run_fleet(Interconnect.SHARED_PIM)
+        _, b = self.run_fleet(Interconnect.SHARED_PIM)
+        assert a == b
+
+    def test_shared_pim_beats_lisa_tpot(self):
+        _, sp = self.run_fleet(Interconnect.SHARED_PIM, turns=2,
+                               think_ns=5e5)
+        _, li = self.run_fleet(Interconnect.LISA, turns=2, think_ns=5e5)
+        ssp, sli = summarize(sp), summarize(li)
+        assert ssp["tpot_ns"]["p99"] < sli["tpot_ns"]["p99"]
+        assert ssp["decode_tps"] > sli["decode_tps"]
+
+    def test_preemption_fires_under_tight_slo(self):
+        _, tight = self.run_fleet(Interconnect.SHARED_PIM, turns=2,
+                                  think_ns=5e5, slo=1e4)
+        _, loose = self.run_fleet(Interconnect.SHARED_PIM, turns=2,
+                                  think_ns=5e5, slo=None)
+        assert sum(r.n_preemptions for r in tight) > 0
+        assert sum(r.n_preemptions for r in loose) == 0
+        # preempted sessions still decode every token
+        assert all(len(r.token_ns) == r.tokens_per_turn * 2 for r in tight)
+
+    def test_migration_defragments_growth(self):
+        spec = SessionSpec.make("chat", "gemma3-1b", n_layers=2,
+                                prompt_tokens=64, decode_tokens=40,
+                                turns=2, think_ns=1e5, rate_sps=3000.0,
+                                concurrency=2)
+        rt = ContinuousRuntime(Interconnect.SHARED_PIM, GEOM,
+                               chunk_tokens=64, tokens_per_bank=16,
+                               tpot_slo_ns=1e6)
+        res = rt.run_sessions(
+            source=MultiTurnSource([spec], sessions_per_spec=4, seed=0))
+        assert sum(r.n_migrations for r in res) > 0
+        assert all(len(r.token_ns) == 80 for r in res)
+        assert rt.allocator.n_free == GEOM.n_banks
+
+    def test_closed_loop_source_completes_budget(self):
+        spec = specs()[0]
+        rt = ContinuousRuntime(Interconnect.SHARED_PIM, GEOM,
+                               chunk_tokens=128, tokens_per_bank=256)
+        res = rt.run_sessions(
+            source=MultiTurnSource([spec], sessions_per_spec=5, seed=1))
+        assert len(res) == 5
+        assert sorted(r.seq for r in res) == list(range(5))
+
+    def test_run_sessions_requires_continuous(self):
+        rt = ContinuousRuntime(Interconnect.SHARED_PIM, GEOM,
+                               continuous=False)
+        with pytest.raises(ValueError):
+            rt.run_sessions(session_trace(specs(), sessions_per_spec=1,
+                                          seed=0))
+
+    def test_continuous_off_is_bitforbit_whole_job(self):
+        tenants = [
+            TenantSpec.make("mm", "mm", n=16, banks=2, rate_jps=2000.0),
+            TenantSpec.make("bfs", "bfs", n_nodes=30, banks=2, priority=2,
+                            rate_jps=2000.0),
+        ]
+        tr = open_loop_trace(tenants, jobs_per_tenant=6, seed=0)
+        for mode in (Interconnect.SHARED_PIM, Interconnect.LISA):
+            base = ServingRuntime(mode, GEOM).run(tr)
+            cont = ContinuousRuntime(mode, GEOM, continuous=False).run(tr)
+            assert cont == base
+
+
+# --- job_cost memoization ---------------------------------------------------------
+
+
+class TestJobCostMemoized:
+    def test_one_structural_build_per_key(self, monkeypatch):
+        rt = ServingRuntime(Interconnect.SHARED_PIM, GEOM, admission="sjf")
+        calls = []
+        real = taskgraph.structural
+
+        def counting(app, **kw):
+            calls.append(app)
+            return real(app, **kw)
+
+        monkeypatch.setattr(taskgraph, "structural", counting)
+        t = TenantSpec.make("mm", "mm", n=16, banks=2)
+        reqs = open_loop_trace([t], jobs_per_tenant=4, seed=0)
+        for r in reqs:
+            rt.job_cost(r)
+        assert calls == ["mm"]
+        # a different shape is a different key
+        t2 = TenantSpec.make("mm2", "mm", n=24, banks=2)
+        rt.job_cost(open_loop_trace([t2], jobs_per_tenant=1, seed=0)[0])
+        assert calls == ["mm", "mm"]
