@@ -1,0 +1,286 @@
+"""Placement-search benchmark: the engine-oracle search must pay its way.
+
+Three guards, all recorded in ``BENCH_placement.json`` and enforced on
+exit:
+
+* **search beats greedy** — on the move-heavy guard cells (the
+  gemma3-prefill tiled matmul and the qwen2-moe prefill expert fan-out)
+  under Shared-PIM, the searched placement's engine-verified makespan must
+  be *strictly* below the best greedy policy's, with the search staying
+  inside a per-cell wall-clock budget.  (The search itself is budgeted in
+  rounds/evals, never wall-clock, so the same seed reproduces the same
+  placement on any machine; the wall bound is asserted out here.)
+* **oracle >= 2x serial** — evaluating one candidate set through the
+  batched :class:`repro.search.PlacementOracle` (shared materialized base,
+  shared resource model and its warm move cache, makespan-only engine
+  entry, size-matched event loop, digest dedup, optional worker pool)
+  must be at least 2x faster than the serial pre-oracle path (one
+  full ``device.scheduler.schedule`` with a fresh ``DeviceModel`` per
+  candidate — what a per-config loop pays), with **bit-identical**
+  makespans.  This is the same batch-vs-loop discipline
+  ``BENCH_sweep.json`` enforces for sweep grids, applied to the search's
+  hot path.
+* **warm cache == zero evals** — re-running the identical search against
+  a populated persistent :class:`repro.search.OracleCache` must produce a
+  bit-identical placement digest while issuing **zero** full engine
+  evaluations.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/placement.py           # full cells
+    PYTHONPATH=src python benchmarks/placement.py --smoke   # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import taskgraph
+from repro.core.pluto import Interconnect
+from repro.device import scheduler as dev_sched
+from repro.device.geometry import DeviceGeometry
+from repro.device.partition import _remap_ir
+from repro.device.resources import DeviceModel
+from repro.search import (OracleCache, PlacementOracle, SearchConfig,
+                          search_pe_map)
+
+#: the move-heavy guard cells (same fleet benchmarks/passes.py guards)
+CELLS = {
+    "matmul": ("gemma3-1b",
+               DeviceGeometry(channels=1, banks_per_channel=4),
+               dict(phase="prefill", n_layers=4, seq_tiles=4)),
+    "moe": ("qwen2-moe-a2.7b",
+            DeviceGeometry(channels=1, banks_per_channel=4, pes_per_bank=8),
+            dict(phase="prefill", n_layers=3, seq_tiles=4)),
+}
+
+FULL_CONFIG = SearchConfig(seed=0)
+SMOKE_CONFIG = SearchConfig(seed=0, beam_rounds=2, neighbors_per_state=6,
+                            sa_rounds=6, sa_proposals=6)
+
+MODE = Interconnect.SHARED_PIM
+
+
+def random_candidates(geom: DeviceGeometry, n: int,
+                      seed: int = 123) -> list[np.ndarray]:
+    """Deterministic bank+intra-bank permutation maps (speedup guard set)."""
+    rng = np.random.default_rng(seed)
+    ppb = geom.pes_per_bank
+    out = []
+    for _ in range(n):
+        m = np.empty(geom.total_pes, dtype=np.int64)
+        for vb, pb in enumerate(rng.permutation(geom.n_banks)):
+            m[vb * ppb:(vb + 1) * ppb] = pb * ppb + rng.permutation(ppb)
+        out.append(m)
+    return out
+
+
+def search_cell(name: str, app: str, geom: DeviceGeometry, kw: dict,
+                config: SearchConfig, cache: OracleCache | None) -> dict:
+    struct = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+    t0 = time.perf_counter()
+    oracle = PlacementOracle(struct, MODE, geom, cache=cache)
+    res = search_pe_map(struct, MODE, geom, config=config, oracle=oracle)
+    wall = time.perf_counter() - t0
+    oracle.close()
+    return {
+        "cell": name, "app": app, "geometry": geom.describe(),
+        "kw": dict(kw), "mode": MODE.value,
+        "greedy": res.greedy,
+        "incumbent_policy": res.incumbent_policy,
+        "greedy_ns": res.incumbent_makespan_ns,
+        "searched_ns": res.makespan_ns,
+        "gain": res.improvement,
+        "digest": res.digest,
+        "n_candidates": res.n_candidates,
+        "oracle": res.stats,
+        "wall_s": wall,
+    }
+
+
+def speedup_check(n_candidates: int, repeats: int = 3) -> dict:
+    """Oracle-vs-serial on one candidate set; identical results required.
+
+    Each path is timed ``repeats`` times and the *minimum* wall is kept —
+    the standard contention filter; the makespan identity is asserted on
+    every repeat.
+    """
+    app, geom, kw = CELLS["matmul"]
+    struct = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+    maps = random_candidates(geom, n_candidates)
+
+    serial_s = oracle_s = float("inf")
+    identical = True
+    engine_kind, n_workers = "", 0
+    for _ in range(repeats):
+        # serial pre-oracle path: a per-config loop — fresh DeviceModel
+        # and a full schedule() (stats, finish times and all) per candidate
+        t0 = time.perf_counter()
+        serial = [dev_sched.schedule(_remap_ir(struct, m), MODE, geom,
+                                     model=DeviceModel(MODE, geom))
+                  .makespan_ns for m in maps]
+        serial_s = min(serial_s, time.perf_counter() - t0)
+
+        # the oracle path, cold every repeat: construction (materialize +
+        # model + surrogate) is charged to the measured time
+        t0 = time.perf_counter()
+        oracle = PlacementOracle(struct, MODE, geom)
+        batched = oracle.evaluate(maps)
+        oracle_s = min(oracle_s, time.perf_counter() - t0)
+        engine_kind, n_workers = oracle.engine_kind, oracle.n_workers
+        oracle.close()
+        identical = identical and all(
+            a == b for a, b in zip(serial, batched))
+
+    return {
+        "n_candidates": n_candidates,
+        "repeats": repeats,
+        "serial_s": serial_s,
+        "oracle_s": oracle_s,
+        "speedup": serial_s / oracle_s if oracle_s > 0 else float("inf"),
+        "identical": identical,
+        "engine_kind": engine_kind,
+        "n_workers": n_workers,
+    }
+
+
+def warm_cache_check(config: SearchConfig, cache_dir: Path) -> dict:
+    """Search twice against one persistent cache: second run = 0 evals."""
+    app, geom, kw = CELLS["moe"]
+    struct = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+    path = cache_dir / "oracle_cache.jsonl"
+    runs = []
+    for _ in range(2):
+        cache = OracleCache(path)
+        oracle = PlacementOracle(struct, MODE, geom, cache=cache)
+        res = search_pe_map(struct, MODE, geom, config=config,
+                            oracle=oracle)
+        oracle.close()
+        runs.append((res.digest, res.makespan_ns,
+                     res.stats["engine_evals"], res.stats["cache_hits"]))
+    (d1, mk1, ev1, _), (d2, mk2, ev2, hits2) = runs
+    return {
+        "first_engine_evals": ev1,
+        "second_engine_evals": ev2,
+        "second_cache_hits": hits2,
+        "digest_match": d1 == d2,
+        "makespan_match": mk1 == mk2,
+        "digest": d1,
+        "cache_entries": len(OracleCache(path)),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized search budgets and candidate sets")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if the whole run exceeds this wall time")
+    ap.add_argument("--cell-budget-s", type=float, default=60.0,
+                    help="fail if any one cell's search exceeds this")
+    ap.add_argument("--out", default="BENCH_placement.json")
+    ap.add_argument("--digest-out", default=None,
+                    help="also write the best placement digests to this "
+                         "text file (one 'cell digest' line each; the CI "
+                         "artifact)")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    config = SMOKE_CONFIG if args.smoke else FULL_CONFIG
+    n_speedup = 48 if args.smoke else 64
+
+    rows = [search_cell(name, app, geom, kw, config, cache=None)
+            for name, (app, geom, kw) in CELLS.items()]
+    for row in rows:
+        print(f"{row['cell']:8s} greedy {row['greedy_ns']:12.1f} ns "
+              f"({row['incumbent_policy']}) -> searched "
+              f"{row['searched_ns']:12.1f} ns ({row['gain'] * 100:+.2f}%)  "
+              f"evals={row['oracle']['engine_evals']} "
+              f"prunes={row['oracle']['surrogate_prunes']} "
+              f"wall={row['wall_s']:.2f}s")
+
+    speed = speedup_check(n_speedup)
+    print(f"oracle   {speed['n_candidates']} candidates: serial "
+          f"{speed['serial_s']:.3f}s vs oracle {speed['oracle_s']:.3f}s "
+          f"= {speed['speedup']:.2f}x ({speed['engine_kind']} loop, "
+          f"{speed['n_workers']} worker(s), "
+          f"identical={speed['identical']})")
+
+    with tempfile.TemporaryDirectory(prefix="repro-oracle-") as td:
+        warm = warm_cache_check(config, Path(td))
+    print(f"warm     first run {warm['first_engine_evals']} engine evals; "
+          f"re-run {warm['second_engine_evals']} evals, "
+          f"{warm['second_cache_hits']} cache hits, "
+          f"digest match={warm['digest_match']}")
+
+    failures = []
+    for row in rows:
+        if not row["searched_ns"] < row["greedy_ns"]:
+            failures.append(
+                f"{row['cell']}: searched makespan {row['searched_ns']:.1f} "
+                f"not strictly below best greedy {row['greedy_ns']:.1f}")
+        if row["wall_s"] > args.cell_budget_s:
+            failures.append(
+                f"{row['cell']}: search took {row['wall_s']:.1f}s, over the "
+                f"{args.cell_budget_s}s cell budget")
+    if not speed["identical"]:
+        failures.append("oracle and serial paths disagree on the candidate "
+                        "set — the oracle is not the engine")
+    if speed["speedup"] < 2.0:
+        failures.append(f"oracle speedup {speed['speedup']:.2f}x < 2x over "
+                        f"the serial per-candidate path")
+    if warm["second_engine_evals"] != 0:
+        failures.append(f"warm-cache re-run issued "
+                        f"{warm['second_engine_evals']} engine evals "
+                        f"(expected 0)")
+    if not (warm["digest_match"] and warm["makespan_match"]):
+        failures.append("warm-cache re-run did not reproduce the placement "
+                        "bit-identically")
+
+    wall = time.perf_counter() - t0
+    if args.budget_s is not None and wall > args.budget_s:
+        failures.append(f"run {wall:.1f}s over budget {args.budget_s}s")
+
+    out = {
+        "config": {
+            "smoke": args.smoke,
+            "mode": MODE.value,
+            "search": config.describe(),
+            "cells": {name: {"app": app, "geometry": geom.describe(), **kw}
+                      for name, (app, geom, kw) in CELLS.items()},
+            "cell_budget_s": args.cell_budget_s,
+            "wall_s": wall,
+        },
+        "cells": rows,
+        "speedup": speed,
+        "warm_cache": warm,
+        "guard_ok": not failures,
+        "failures": failures,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} cells, {wall:.1f}s)")
+
+    if args.digest_out:
+        lines = [f"{row['cell']} {row['digest']}" for row in rows]
+        Path(args.digest_out).write_text("\n".join(lines) + "\n")
+        print(f"wrote {args.digest_out}")
+
+    if failures:
+        print("FAILURES:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("searched placement strictly beats best greedy on every guard "
+          "cell; oracle >= 2x serial with identical results; warm cache "
+          "replays with zero engine evals")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

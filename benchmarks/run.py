@@ -42,6 +42,9 @@ _HEADLINES = {
                      lambda d: max((c["shared_pim_gain"]
                                     for c in d.get("cells", [])
                                     if c.get("guarded")), default=None)),
+    "BENCH_placement": ("max_search_gain",
+                        lambda d: max((c["gain"] for c in d.get("cells", [])),
+                                      default=None)),
 }
 
 #: keys whose recorded value constitutes a pass/fail guard, in the order

@@ -1009,6 +1009,20 @@ class EngineSession:
 
     # --- results ----------------------------------------------------------------
 
+    def makespan(self) -> float:
+        """Latest finish time executed so far (cheap :meth:`stats` subset).
+
+        The placement-search oracle calls the engine thousands of times and
+        only ever reads this one float; building the full
+        :class:`EngineStats` (finish-time dict included) per call would
+        dominate the oracle's budget.  Identical to
+        ``stats().makespan_ns`` under both event loops.
+        """
+        if self._vec is not None:
+            n = self._v_finish.n
+            return float(self._v_finish.a[:n].max()) if n else 0.0
+        return max(self._finish) if self._finish else 0.0
+
     def stats(self) -> EngineStats:
         """Aggregate schedule outcome over everything executed so far."""
         if self._vec is not None:
@@ -1047,3 +1061,22 @@ def run(g: TaskGraph, model: ResourceModel, *,
     session.admit(g, at=0.0, uid_offset=0)
     session.advance()
     return session.stats()
+
+
+def oracle_makespan(g: TaskGraph, model: ResourceModel, *,
+                    engine: str = "vector",
+                    validate: bool = False) -> float:
+    """Makespan-only engine evaluation — the placement search's cost oracle.
+
+    Exactly :func:`run` minus the :class:`EngineStats` construction: one
+    graph admitted at t=0, advanced to completion, one float returned.
+    The schedule computed is bit-identical to :func:`run`'s (same session,
+    same event loop), so a searched placement's reported makespan is always
+    an ordinary engine result — the search's surrogate never produces this
+    number.  ``validate`` defaults off because the oracle evaluates remaps
+    of one already-validated graph.
+    """
+    session = EngineSession(model, validate=validate, engine=engine)
+    session.admit(g, at=0.0, uid_offset=0)
+    session.advance()
+    return session.makespan()

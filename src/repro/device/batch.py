@@ -124,6 +124,51 @@ class BatchRunner:
             out.append(r)
         return out
 
+    # --- placement-search layers (parallel + persistent) ------------------------
+
+    def placement_oracle(self, cfg: SweepConfig, *, cache=None,
+                         n_workers: int | None = None, profile=None):
+        """A :class:`repro.search.PlacementOracle` over ``cfg``'s cell.
+
+        Layered on this runner's dedup caches: the structural graph comes
+        from the ``taskgraph`` ``lru_cache`` and the resource model from
+        :meth:`_model`, so an oracle and an ordinary sweep of the same
+        (mode, geometry) share one :class:`DeviceModel` and its memoized
+        cross-bank plan prices.  ``cache`` (an
+        :class:`repro.search.OracleCache` or a path) adds the persistent
+        layer; ``n_workers`` the process-pool one.
+        """
+        from repro.core import taskgraph
+        from repro import search
+        struct = taskgraph.structural(
+            cfg.app, n_pes=cfg.geometry.total_pes, **cfg.kwargs)
+        if cache is not None and not hasattr(cache, "get"):
+            cache = search.OracleCache(cache)
+        return search.PlacementOracle(
+            struct, cfg.mode, cfg.geometry, cache=cache,
+            model=self._model(cfg.mode, cfg.geometry),
+            n_workers=n_workers, profile=profile)
+
+    def search_placement(self, cfg: SweepConfig, *, config=None,
+                         cache=None, n_workers: int | None = None,
+                         profile=None):
+        """Run the cost-driven placement search on one sweep cell.
+
+        Returns the :class:`repro.search.SearchResult`; the oracle (and
+        its worker pool, if any) is torn down before returning.
+        """
+        from repro.core import taskgraph
+        from repro import search
+        oracle = self.placement_oracle(cfg, cache=cache,
+                                       n_workers=n_workers, profile=profile)
+        struct = taskgraph.structural(
+            cfg.app, n_pes=cfg.geometry.total_pes, **cfg.kwargs)
+        try:
+            return search.search_pe_map(struct, cfg.mode, cfg.geometry,
+                                        config=config, oracle=oracle)
+        finally:
+            oracle.close()
+
 
 def run_grid(configs: Sequence[SweepConfig]) -> list[DeviceScheduleResult]:
     """One-shot convenience wrapper around :class:`BatchRunner`."""
@@ -131,10 +176,21 @@ def run_grid(configs: Sequence[SweepConfig]) -> list[DeviceScheduleResult]:
 
 
 def clear_caches() -> None:
-    """Drop every cross-config cache (for cold-start benchmarking)."""
+    """Drop every cross-config cache (for cold-start benchmarking).
+
+    Also tears down the placement-search layers: every live oracle's
+    in-memory memo and surrogate tables and every
+    :class:`repro.search.OracleCache`'s loaded state.  On-disk cache files
+    survive — they are the *persistent* layer; the next access re-reads
+    them cold.
+    """
     from repro.core import taskgraph
 
     partition._partitioned_struct.cache_clear()
     partition._optimized_struct.cache_clear()
     for fn, _sig in taskgraph._STRUCTS.values():
         fn.cache_clear()
+    import sys
+    search = sys.modules.get("repro.search")
+    if search is not None:          # only if the search layer was ever used
+        search.clear_caches()

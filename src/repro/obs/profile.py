@@ -66,9 +66,15 @@ class AdmitSample:
 class EngineProfile:
     """Accumulates per-advance samples for one session (see module doc)."""
 
+    #: search-oracle counter keys, in the order :meth:`summary` emits them
+    ORACLE_KEYS = ("oracle_evals", "oracle_memo_hits", "oracle_cache_hits",
+                   "oracle_cache_misses", "surrogate_prunes",
+                   "oracle_batches", "oracle_workers")
+
     def __init__(self) -> None:
         self.samples: list[AdvanceSample] = []
         self.admit_samples: list[AdmitSample] = []
+        self.oracle_counters = {k: 0 for k in self.ORACLE_KEYS}
 
     def add(self, sample: AdvanceSample) -> None:
         self.samples.append(sample)
@@ -89,6 +95,27 @@ class EngineProfile:
                                           token_probes, refresh_windows,
                                           batches, batched_tasks,
                                           vector_probes, heap_ops_avoided))
+
+    def record_oracle(self, *, evals: int = 0, memo_hits: int = 0,
+                      cache_hits: int = 0, cache_misses: int = 0,
+                      prunes: int = 0, workers: int = 1) -> None:
+        """Search-facing hook: one placement-oracle batch's bookkeeping.
+
+        ``evals`` counts *full engine* evaluations (the costly unit the
+        surrogate and the caches exist to avoid); ``prunes`` counts
+        candidates discarded by the admissible lower bound; the hit
+        counters split avoided evals between the in-memory memo and the
+        persistent on-disk cache.  ``workers`` is the process-pool width
+        the batch ran with (the max over batches is reported).
+        """
+        c = self.oracle_counters
+        c["oracle_evals"] += evals
+        c["oracle_memo_hits"] += memo_hits
+        c["oracle_cache_hits"] += cache_hits
+        c["oracle_cache_misses"] += cache_misses
+        c["surrogate_prunes"] += prunes
+        c["oracle_batches"] += 1
+        c["oracle_workers"] = max(c["oracle_workers"], workers)
 
     # --- aggregates -------------------------------------------------------------
 
@@ -138,4 +165,5 @@ class EngineProfile:
                                        for s in self.admit_samples),
             "energy_entries": sum(s.energy_entries
                                   for s in self.admit_samples),
+            **{k: self.oracle_counters[k] for k in self.ORACLE_KEYS},
         }

@@ -76,6 +76,41 @@ def record_all(out_dir: Path, *, refresh: RefreshSpec | None = None,
     return paths
 
 
+def report_search(geom: DeviceGeometry | None = None) -> dict:
+    """Run the placement search on every viewer cell and print the oracle
+    counters (evals / surrogate prunes / cache hits / workers) the search
+    satellite surfaces — the human-readable view of
+    :attr:`repro.obs.profile.EngineProfile.oracle_counters`."""
+    from repro.core import taskgraph
+    from repro.obs.profile import EngineProfile
+    from repro.search import search_pe_map
+
+    if geom is None:
+        geom = DeviceGeometry(channels=1, banks_per_channel=4,
+                              pes_per_bank=8)
+    out = {}
+    for name, (app, kw) in CELLS.items():
+        prof = EngineProfile()
+        struct = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+        res = search_pe_map(struct, Interconnect.SHARED_PIM, geom,
+                            profile=prof)
+        c = prof.oracle_counters
+        print(f"{name:12s} search     "
+              f"greedy {res.incumbent_makespan_ns:10.1f} ns "
+              f"({res.incumbent_policy}) -> {res.makespan_ns:10.1f} ns "
+              f"({res.improvement * 100:+.2f}%)")
+        print(f"{'':12s} oracle     "
+              f"{c['oracle_evals']} engine evals, "
+              f"{c['surrogate_prunes']} surrogate prunes, "
+              f"{c['oracle_cache_hits']} cache hits / "
+              f"{c['oracle_cache_misses']} misses, "
+              f"{c['oracle_memo_hits']} memo hits, "
+              f"{c['oracle_workers']} worker(s)  "
+              f"digest={res.digest}")
+        out[name] = res
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--out-dir", default=None,
@@ -83,12 +118,18 @@ def main(argv=None) -> int:
                          "(default: a fresh temp directory)")
     ap.add_argument("--refresh", action="store_true",
                     help="enable DDR4 refresh (adds per-bank refresh tracks)")
+    ap.add_argument("--search", action="store_true",
+                    help="also run the cost-driven placement search on "
+                         "each cell and print the oracle counters")
     args = ap.parse_args(argv)
 
     out_dir = Path(args.out_dir) if args.out_dir else Path(
         tempfile.mkdtemp(prefix="repro-traces-"))
     paths = record_all(out_dir,
                        refresh=RefreshSpec() if args.refresh else None)
+    if args.search:
+        print()
+        report_search()
     print(f"\n{len(paths)} traces in {out_dir}")
     print("open https://ui.perfetto.dev and drag a .trace.json in; "
           "one track per bank PE / bus / shared row, plus windowed "

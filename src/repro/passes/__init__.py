@@ -44,6 +44,7 @@ from repro.passes.pipeline import (STAGES, Pass, Pipeline,  # noqa: F401
 from repro.passes.placement import (LeasePlacePass, LegalizePass,  # noqa: F401
                                     PlacePass, ValidatePass)
 from repro.passes.rewrite import graphs_equal, rebuild  # noqa: F401
+from repro.passes.search import SearchPlacePass  # noqa: F401
 
 
 def optimization_passes(names: Sequence[str] = DEFAULT_OPT, *,
@@ -92,5 +93,33 @@ def lease_pipeline(geom, banks, policy: str = "locality_first", *,
     """The full pipeline for a bank-set lease (serving runtime placement)."""
     return Pipeline([
         ValidatePass(), LeasePlacePass(geom, banks, policy),
+        *optimization_passes(opt, pes_per_bank=geom.pes_per_bank),
+        LegalizePass(geom.total_pes)])
+
+
+def search_pipeline(geom, mode, *, config=None, opt: Sequence[str] = (),
+                    oracle=None) -> Pipeline:
+    """The full pipeline with the cost-driven search as its place stage.
+
+    ``mode`` (an :class:`~repro.core.pluto.Interconnect`) is what the
+    greedy place stage never needed: the search's oracle prices real
+    schedules, so the place decision becomes interconnect-aware.  The
+    searched placement is never worse than the best greedy policy's (the
+    search seeds from all of them and verifies with the engine).
+    """
+    return Pipeline([
+        ValidatePass(), SearchPlacePass(mode, geom, config=config,
+                                        oracle=oracle),
+        *optimization_passes(opt, pes_per_bank=geom.pes_per_bank),
+        LegalizePass(geom.total_pes)])
+
+
+def lease_search_pipeline(geom, banks, mode, *, config=None,
+                          opt: Sequence[str] = (),
+                          oracle=None) -> Pipeline:
+    """:func:`search_pipeline` over a leased bank subset (serving path)."""
+    return Pipeline([
+        ValidatePass(), SearchPlacePass(mode, geom, banks=banks,
+                                        config=config, oracle=oracle),
         *optimization_passes(opt, pes_per_bank=geom.pes_per_bank),
         LegalizePass(geom.total_pes)])

@@ -84,6 +84,7 @@ class ServingRuntime:
                  admission: str = "fifo",
                  placement: str = "locality_first",
                  opt: tuple[str, ...] = (),
+                 search=None,
                  refresh: RefreshSpec | None = None,
                  model: DeviceModel | None = None,
                  recorder=None, metrics=None):
@@ -92,6 +93,14 @@ class ServingRuntime:
         self.mode = mode
         self.geom = geom
         self.placement = placement
+        # opt-in cost-driven lease placement: ``placement="search"`` runs
+        # each leased job's graph through the search place stage
+        # (repro.search: engine-oracle beam + annealing over the leased
+        # banks) instead of one greedy policy; ``search`` optionally
+        # carries a repro.search.SearchConfig.  Graphs stay memoized per
+        # (app, kw, banks), so the search cost is paid once per distinct
+        # lease shape, not per admission.
+        self.search = search
         self.opt = tuple(opt)
         # opt-in observability (repro.obs): the recorder is forwarded into
         # the engine session (schedule tracing) and additionally captures
@@ -116,6 +125,15 @@ class ServingRuntime:
 
     # --- job graphs -------------------------------------------------------------
 
+    def _lease_pipeline(self, banks: tuple[int, ...]):
+        """The lease pipeline for one bank set under this runtime's config."""
+        if self.placement == "search":
+            return passlib.lease_search_pipeline(
+                self.geom, banks, self.mode, config=self.search,
+                opt=self.opt)
+        return passlib.lease_pipeline(self.geom, banks, self.placement,
+                                      opt=self.opt)
+
     def _graph(self, req: JobRequest, banks: tuple[int, ...]) -> TaskGraph:
         t = req.tenant
         key = (t.app, t.kw, banks)
@@ -123,9 +141,7 @@ class ServingRuntime:
         if g is None:
             struct = taskgraph.structural(
                 t.app, n_pes=len(banks) * self.geom.pes_per_bank, **t.kwargs)
-            pipe = passlib.lease_pipeline(self.geom, banks, self.placement,
-                                          opt=self.opt)
-            placed, log = pipe.run(struct)
+            placed, log = self._lease_pipeline(banks).run(struct)
             self.rewrite_logs[key] = log
             g = self._graphs[key] = ir.materialize(placed, self.mode)
         return g
@@ -762,9 +778,7 @@ class ContinuousRuntime(ServingRuntime):
                 spec.app, phase=phase,
                 n_pes=len(banks) * self.geom.pes_per_bank,
                 kv_tiles=kv_tiles, seq_tiles=seq_tiles, **spec.kwargs)
-            pipe = passlib.lease_pipeline(self.geom, banks, self.placement,
-                                          opt=self.opt)
-            placed, log = pipe.run(struct)
+            placed, log = self._lease_pipeline(banks).run(struct)
             self.rewrite_logs[key] = log
             g = self._graphs[key] = ir.materialize(placed, self.mode)
         return g

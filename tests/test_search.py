@@ -1,0 +1,306 @@
+"""Placement search: oracle, surrogate, cache, and pipeline properties.
+
+Four layers:
+
+* unit tests pin the oracle contract (``oracle_makespan`` == the offline
+  scheduler, memo/persistent-cache accounting, worker-count determinism)
+  and the persistent cache's corruption tolerance;
+* seeded property checks: the surrogate is *admissible* (never above the
+  engine's makespan) across modes, geometries and random placements, and
+  the searched placement is legal and never worse than the best greedy
+  incumbent;
+* hypothesis variants of the same two properties over drawn placements
+  (skipped when hypothesis is absent, like ``test_passes.py``);
+* integration: ``SearchPlacePass`` inside the staged pipeline rewrites the
+  graph and logs it, and ``device.batch.clear_caches()`` tears the search
+  layers down.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st  # noqa: F401
+
+from repro import passes, search
+from repro.core import engine, ir, taskgraph
+from repro.core.pluto import Interconnect
+from repro.device import DeviceGeometry, batch, partition
+from repro.device import scheduler as dev_sched
+from repro.device.resources import DeviceModel
+from repro.search import (LowerBoundModel, OracleCache, PlacementOracle,
+                          SearchConfig, placement_digest, search_pe_map)
+
+GEOM = DeviceGeometry(channels=1, banks_per_channel=4)
+MODE = Interconnect.SHARED_PIM
+
+#: small enough for per-test searches, move-heavy enough to be non-trivial
+CELLS = {
+    "mm": ("mm", dict(n=24)),
+    "moe": ("qwen2-moe-a2.7b", dict(phase="decode", n_layers=2)),
+}
+
+#: a tiny search budget: every test below runs the full beam + SA loop
+SMALL = SearchConfig(seed=0, beam_width=2, beam_rounds=2,
+                     neighbors_per_state=4, sa_rounds=3, sa_proposals=4)
+
+
+def struct_of(name, geom=GEOM):
+    app, kw = CELLS[name]
+    return taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+
+
+def random_maps(geom, n, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.permutation(geom.total_pes).astype(np.int64)
+            for _ in range(n)]
+
+
+class TestOracle:
+    def test_oracle_makespan_matches_scheduler(self):
+        """The oracle entry point IS the engine: same number as schedule()."""
+        for name in CELLS:
+            for policy in partition.POLICIES:
+                g = partition.partitioned_struct(
+                    CELLS[name][0], GEOM, policy=policy,
+                    **CELLS[name][1])
+                want = dev_sched.schedule(g, MODE, GEOM).makespan_ns
+                got = engine.oracle_makespan(
+                    ir.materialize(g, MODE), DeviceModel(MODE, GEOM))
+                assert got == want
+
+    def test_scalar_vector_oracle_identical(self):
+        struct = struct_of("mm")
+        o_s = PlacementOracle(struct, MODE, GEOM, engine_kind="scalar")
+        o_v = PlacementOracle(struct, MODE, GEOM, engine_kind="vector")
+        maps = random_maps(GEOM, 4)
+        assert o_s.evaluate(maps) == o_v.evaluate(maps)
+
+    def test_memo_and_dedup_accounting(self):
+        o = PlacementOracle(struct_of("mm"), MODE, GEOM)
+        m = random_maps(GEOM, 1)[0]
+        r1 = o.evaluate([m, m.copy()])          # in-batch dedup: one eval
+        assert r1[0] == r1[1]
+        assert o.stats.engine_evals == 1
+        r2 = o.evaluate_one(m)                  # memo hit: still one eval
+        assert r2 == r1[0]
+        assert o.stats.engine_evals == 1
+        assert o.stats.memo_hits >= 1
+
+    def test_worker_count_determinism(self):
+        """1-worker and 2-worker oracles agree bit-for-bit, and the search
+        trajectory (digest and makespan) is identical at any worker count."""
+        struct = struct_of("moe")
+        maps = random_maps(GEOM, 6)
+        o1 = PlacementOracle(struct, MODE, GEOM, n_workers=1)
+        o2 = PlacementOracle(struct, MODE, GEOM, n_workers=2)
+        try:
+            assert o1.evaluate(maps) == o2.evaluate(maps)
+        finally:
+            o2.close()
+        r1 = search_pe_map(struct, MODE, GEOM, config=SMALL)
+        r2 = search_pe_map(
+            struct, MODE, GEOM,
+            config=SearchConfig(**{**SMALL.__dict__, "n_workers": 2}))
+        assert r1.digest == r2.digest
+        assert r1.makespan_ns == r2.makespan_ns
+
+    def test_surrogate_prune_never_decides(self):
+        """Pruned candidates are never returned as makespans: every
+        non-None value in an evaluate() batch came from the engine."""
+        struct = struct_of("moe")
+        o = PlacementOracle(struct, MODE, GEOM)
+        maps = random_maps(GEOM, 8)
+        base = min(v for v in o.evaluate(maps[:2]))
+        out = o.evaluate(maps[2:], prune_at=base)
+        for m, v in zip(maps[2:], out):
+            if v is not None:
+                assert v == o.evaluate_one(m)   # engine-backed, memoized
+
+
+class TestSurrogateAdmissible:
+    @pytest.mark.parametrize("mode", list(Interconnect))
+    @pytest.mark.parametrize("geom", [
+        GEOM,
+        DeviceGeometry(channels=1, banks_per_channel=4, pes_per_bank=8),
+        DeviceGeometry(channels=2, banks_per_channel=4,
+                       bank_groups_per_channel=2),
+    ])
+    def test_lower_bound_below_engine(self, mode, geom):
+        for name in CELLS:
+            app, kw = CELLS[name]
+            struct = taskgraph.structural(app, n_pes=geom.total_pes, **kw)
+            base = ir.materialize(struct, mode)
+            lbm = LowerBoundModel(base, geom)
+            model = DeviceModel(mode, geom)
+            for m in random_maps(geom, 6, seed=11):
+                lb = lbm.lower_bound(m)
+                mk = engine.oracle_makespan(partition._remap_ir(base, m),
+                                            model)
+                assert lb <= mk + 1e-9, \
+                    f"{name}/{mode.value}: lb {lb} > engine {mk}"
+
+    @hypothesis.given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_lower_bound_admissible_drawn(self, seed):
+        struct = struct_of("moe")
+        base = ir.materialize(struct, MODE)
+        lbm = LowerBoundModel(base, GEOM)
+        model = DeviceModel(MODE, GEOM)
+        m = np.random.default_rng(seed).permutation(
+            GEOM.total_pes).astype(np.int64)
+        mk = engine.oracle_makespan(partition._remap_ir(base, m), model)
+        assert lbm.lower_bound(m) <= mk + 1e-9
+
+
+def assert_legal_and_never_worse(res, struct, geom):
+    m = np.asarray(res.pe_map, dtype=np.int64)
+    # legal: an injective map into the geometry's global PE space —
+    # exactly what LegalizePass enforces post-placement
+    assert m.shape == (geom.total_pes,)
+    assert m.min() >= 0 and m.max() < geom.total_pes
+    assert len(np.unique(m)) == len(m)
+    g = partition._remap_ir(struct, m)
+    g.validate()
+    # never worse than the incumbent, and the result is engine-verified
+    assert res.makespan_ns <= res.incumbent_makespan_ns
+    assert res.makespan_ns == dev_sched.schedule(g, MODE, geom).makespan_ns
+
+
+class TestSearchProperties:
+    @pytest.mark.parametrize("name", list(CELLS))
+    def test_legal_and_never_worse(self, name):
+        struct = struct_of(name)
+        res = search_pe_map(struct, MODE, GEOM, config=SMALL)
+        assert_legal_and_never_worse(res, struct, GEOM)
+        assert res.digest == placement_digest(
+            np.asarray(res.pe_map, dtype=np.int64))
+
+    @hypothesis.given(st.integers(min_value=0, max_value=2 ** 16))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_legal_and_never_worse_drawn_seed(self, seed):
+        struct = struct_of("mm")
+        cfg = SearchConfig(**{**SMALL.__dict__, "seed": seed})
+        res = search_pe_map(struct, MODE, GEOM, config=cfg)
+        assert_legal_and_never_worse(res, struct, GEOM)
+
+    def test_same_seed_same_result(self):
+        struct = struct_of("mm")
+        r1 = search_pe_map(struct, MODE, GEOM, config=SMALL)
+        r2 = search_pe_map(struct, MODE, GEOM, config=SMALL)
+        assert r1.digest == r2.digest
+        assert r1.makespan_ns == r2.makespan_ns
+        assert r1.n_candidates == r2.n_candidates
+
+
+class TestOracleCache:
+    def test_corrupt_and_truncated_lines_skipped(self, tmp_path):
+        p = tmp_path / "cache.jsonl"
+        good1 = json.dumps({"k": "a", "v": 1.5})
+        good2 = json.dumps({"k": "b", "v": 2.5})
+        p.write_text("not json at all\n"
+                     + good1 + "\n"
+                     + '{"wrong": "schema"}\n'
+                     + '{"k": "c", "v": {"not": "a number is fine too"}}\n'
+                     + good2 + "\n"
+                     + '{"k": "d", "v": 9.9')     # truncated tail, no \n
+        c = OracleCache(p)
+        assert c.get("a") == 1.5
+        assert c.get("b") == 2.5
+        assert c.get("d") is None
+        assert c.n_bad_lines == 3
+        # the cache stays writable after a corrupt load
+        c.put("e", 3.5)
+        assert OracleCache(p).get("e") == 3.5
+
+    def test_missing_file_is_empty(self, tmp_path):
+        c = OracleCache(tmp_path / "nope.jsonl")
+        assert len(c) == 0
+        assert c.get("x") is None
+
+    def test_oracle_skips_corrupt_entry(self, tmp_path):
+        """A non-numeric cached value is a miss, not a crash."""
+        struct = struct_of("mm")
+        m = random_maps(GEOM, 1)[0]
+        o = PlacementOracle(struct, MODE, GEOM,
+                            cache=OracleCache(tmp_path / "c.jsonl"))
+        key = f"{o.key_prefix}/{placement_digest(m)}"
+        o.cache.put(key, "corrupted-by-hand")
+        assert o.evaluate_one(m) == engine.oracle_makespan(
+            partition._remap_ir(o.base, m), o.model)
+        assert o.stats.engine_evals == 1
+
+    def test_warm_cache_zero_engine_evals(self, tmp_path):
+        struct = struct_of("moe")
+        path = tmp_path / "oracle.jsonl"
+        o1 = PlacementOracle(struct, MODE, GEOM, cache=OracleCache(path))
+        r1 = search_pe_map(struct, MODE, GEOM, config=SMALL, oracle=o1)
+        assert o1.stats.engine_evals > 0
+        o2 = PlacementOracle(struct, MODE, GEOM, cache=OracleCache(path))
+        r2 = search_pe_map(struct, MODE, GEOM, config=SMALL, oracle=o2)
+        assert o2.stats.engine_evals == 0
+        assert o2.stats.cache_hits > 0
+        assert r2.digest == r1.digest
+        assert r2.makespan_ns == r1.makespan_ns
+
+
+class TestAutotuner:
+    def test_choice_cached_and_never_worse(self, tmp_path):
+        tuner = search.Autotuner(MODE, GEOM,
+                                 cache=OracleCache(tmp_path / "t.jsonl"),
+                                 config=SMALL)
+        struct = struct_of("mm")
+        c1 = tuner.choose(struct)
+        assert not c1.from_cache
+        assert c1.makespan_ns <= c1.greedy_makespan_ns
+        c2 = tuner.choose(struct)
+        assert c2.from_cache
+        assert c2.as_value() == c1.as_value()
+        g, _log = tuner.pipeline(struct).run(struct)
+        assert dev_sched.schedule(g, MODE, GEOM).makespan_ns \
+            == c1.makespan_ns
+
+
+class TestPipelineIntegration:
+    def test_search_place_pass_runs_and_logs(self):
+        struct = struct_of("moe")
+        pipe = passes.search_pipeline(GEOM, MODE, config=SMALL)
+        g, log = pipe.run(struct)
+        entries = [e for e in log.entries if e.pass_name == "search_place"]
+        assert len(entries) == 1 and entries[0].action == "place"
+        greedy_best = min(
+            dev_sched.schedule(
+                partition.partitioned_struct(CELLS["moe"][0], GEOM,
+                                             policy=p, **CELLS["moe"][1]),
+                MODE, GEOM).makespan_ns
+            for p in partition.POLICIES)
+        assert dev_sched.schedule(g, MODE, GEOM).makespan_ns <= greedy_best
+
+    def test_profile_counters_surface(self):
+        from repro.obs.profile import EngineProfile
+        prof = EngineProfile()
+        search_pe_map(struct_of("mm"), MODE, GEOM, config=SMALL,
+                      profile=prof)
+        c = prof.oracle_counters
+        assert c["oracle_evals"] > 0
+        assert c["oracle_workers"] == 1
+        assert set(EngineProfile.ORACLE_KEYS) <= set(prof.summary())
+
+    def test_batch_runner_search_and_clear_caches(self, tmp_path):
+        runner = batch.BatchRunner()
+        cfg = batch.SweepConfig.make(CELLS["mm"][0], MODE, GEOM,
+                                     **CELLS["mm"][1])
+        res = runner.search_placement(cfg, config=SMALL,
+                                      cache=tmp_path / "b.jsonl")
+        assert res.makespan_ns <= res.incumbent_makespan_ns
+        # teardown: live oracles forget their memo, loaded caches drop
+        # their in-memory state (the on-disk file survives)
+        o = runner.placement_oracle(cfg, cache=tmp_path / "b.jsonl")
+        m = random_maps(GEOM, 1)[0]
+        o.evaluate_one(m)
+        batch.clear_caches()
+        assert o.stats.engine_evals in (0, 1)   # stats survive...
+        o.evaluate_one(m)                       # ...but the memo is gone:
+        assert o.stats.cache_hits + o.stats.engine_evals >= 2
+        assert (tmp_path / "b.jsonl").exists()
